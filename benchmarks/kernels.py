@@ -1,0 +1,65 @@
+"""Framework kernel benchmarks (CPU): blockwise (flash-style) attention vs
+naive O(S^2)-materializing attention; chunked SSD vs sequential recurrence.
+The Pallas kernels themselves target TPU (interpret mode is a correctness
+harness, not a perf path); these measure the same *algorithms* in XLA:CPU."""
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import blockwise_attention
+from repro.models.ssm import ssd_chunked, ssd_ref
+
+
+def _time(f, *args, reps=3):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _naive_attention(q, k, v, scale):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    S = q.shape[1]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def bench():
+    rows = []
+    B, S, H, hd = 1, 2048, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    scale = 1.0 / math.sqrt(hd)
+
+    fa = jax.jit(lambda q, k, v: blockwise_attention(
+        q, k, v, pos, pos, causal=True, chunk=512))
+    nv = jax.jit(lambda q, k, v: _naive_attention(q, k, v, scale))
+    t_fa, t_nv = _time(fa, q, k, v), _time(nv, q, k, v)
+    rows.append({"name": "kernels/flash_vs_naive_attention_2k",
+                 "us_per_call": t_fa * 1e6,
+                 "derived": f"naive={t_nv*1e6:.0f}us ratio={t_nv/t_fa:.2f}x"})
+
+    B, S, Hh, P, N = 2, 2048, 12, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    xs = jax.random.normal(ks[0], (B, S, Hh, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Hh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hh,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    C_ = jax.random.normal(jax.random.PRNGKey(9), (B, S, N), jnp.float32)
+    ch = jax.jit(lambda *a: ssd_chunked(*a, chunk=128))
+    sq = jax.jit(ssd_ref)
+    t_ch, t_sq = _time(ch, xs, dt, A, B_, C_), _time(sq, xs, dt, A, B_, C_)
+    rows.append({"name": "kernels/ssd_chunked_vs_sequential_2k",
+                 "us_per_call": t_ch * 1e6,
+                 "derived": f"seq={t_sq*1e6:.0f}us speedup={t_sq/t_ch:.2f}x"})
+    return rows

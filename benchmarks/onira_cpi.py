@@ -1,0 +1,40 @@
+"""Paper Fig. 12/13: Onira CPI accuracy vs the analytic pipeline reference
+(RTL stand-in) + MLP scaling + burst behaviours."""
+import time
+
+from repro.sims.onira import (MICROBENCHES, analytic_cpi, run_microbenches,
+                              run_mlp_sweep)
+
+
+def bench():
+    rows = []
+    t0 = time.perf_counter()
+    res = run_microbenches()
+    dt = time.perf_counter() - t0
+    errs = []
+    for name, r in res.items():
+        ref = analytic_cpi(name)
+        err = abs(r["cpi"] - ref) / ref
+        errs.append(err)
+        rows.append({
+            "name": f"onira_cpi/{name}",
+            "us_per_call": dt / len(res) * 1e6,
+            "derived": (f"cpi={r['cpi']:.3f} ref={ref:.3f} "
+                        f"err={err*100:.1f}% (paper band: 10-20%)"),
+        })
+    mlp = run_mlp_sweep()
+    mono = all(mlp[a] >= mlp[b] - 1e-6
+               for a, b in zip(list(mlp)[:-1], list(mlp)[1:]))
+    rows.append({
+        "name": "onira_cpi/MLP_sweep",
+        "us_per_call": 0.0,
+        "derived": ("cpi(N)=" +
+                    ",".join(f"{k}:{v:.2f}" for k, v in mlp.items()) +
+                    f" saturating={mono} (paper Fig 13a)"),
+    })
+    rows.append({
+        "name": "onira_cpi/max_err",
+        "us_per_call": 0.0,
+        "derived": f"max_cpi_err={max(errs)*100:.1f}% (paper: 10-20%)",
+    })
+    return rows

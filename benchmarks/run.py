@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  Fig 9a/9b  smart_ticking        speedup + accuracy
+  Fig 10     parallel_sim         transparent parallelism scaling
+  Fig 11     tracing_overhead     tracer-mix slowdown
+  Fig 12/13  onira_cpi            RISC-V timing-model CPI accuracy
+  Fig 14     triosim_validation   DP/TP/PP step-time validation
+  (framework) kernels             attention/SSD algorithm benchmarks
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the assigned
+architectures come from the dry-run (see launch/dryrun.py + EXPERIMENTS.md);
+they are analysis artifacts, not wall-time benchmarks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of benchmark module names")
+    args = ap.parse_args()
+
+    from . import (kernels, onira_cpi, parallel_sim, pdes_scaling,
+                   smart_ticking, tracing_overhead, triosim_validation)
+    modules = {
+        "smart_ticking": smart_ticking,
+        "parallel_sim": parallel_sim,
+        "tracing_overhead": tracing_overhead,
+        "onira_cpi": onira_cpi,
+        "triosim_validation": triosim_validation,
+        "kernels": kernels,
+        "pdes_scaling": pdes_scaling,
+    }
+    if args.only:
+        modules = {k: v for k, v in modules.items() if k in args.only}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules.items():
+        try:
+            for row in mod.bench():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"\"{row['derived']}\"")
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness going, report at exit
+            failures += 1
+            print(f"{name},ERROR,\"{e!r}\"")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

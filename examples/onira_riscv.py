@@ -1,0 +1,27 @@
+"""Onira example (paper §5.1): the in-order RISC-V timing model — CPI per
+microbenchmark vs the analytic pipeline reference, plus the MLP sweep.
+
+  PYTHONPATH=src python examples/onira_riscv.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sims.onira import (analytic_cpi, run_microbenches,  # noqa: E402
+                              run_mlp_sweep)
+
+
+def main():
+    print(f"{'bench':>10s} {'cpi':>7s} {'ref':>7s} {'err%':>6s}")
+    for name, r in run_microbenches().items():
+        ref = analytic_cpi(name)
+        print(f"{name:>10s} {r['cpi']:>7.3f} {ref:>7.3f} "
+              f"{abs(r['cpi']-ref)/ref*100:>5.1f}%")
+    print("\nMLP sweep (CPI vs independent loads — paper Fig 13a):")
+    for n, cpi in run_mlp_sweep().items():
+        print(f"  N={n:>2d}: CPI={cpi:.2f} " + "#" * int(cpi * 4))
+
+
+if __name__ == "__main__":
+    main()

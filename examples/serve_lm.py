@@ -1,0 +1,64 @@
+"""Serving example: train a byte-level LM briefly, then serve batched
+requests — prefill builds the KV cache, decode streams tokens greedily.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.data import ByteTokenizer, DataPipeline  # noqa: E402
+from repro.models import transformer as tfm  # noqa: E402
+from repro.train.loop import LoopConfig, train  # noqa: E402
+from repro.train.step import TrainHParams  # noqa: E402
+
+CORPUS = ("the quick brown fox jumps over the lazy dog. " * 3000)
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_config("stablelm-1.6b"), n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=4, head_dim=32, d_ff=512, vocab=256)
+    data = DataPipeline.from_text(cfg, CORPUS, batch=8, seq=96)
+    params, _, _ = train(cfg, data,
+                         LoopConfig(steps=150, ckpt_every=1000,
+                                    ckpt_dir="runs/serve_ckpt",
+                                    log_every=50),
+                         TrainHParams(lr=3e-3, donate=False))
+
+    tok = ByteTokenizer()
+    prompts = ["the quick brown ", "pack my box with ",
+               "the lazy ", "five dozen "]
+    S0 = max(len(p) for p in prompts)
+    ids = jnp.stack([jnp.pad(jnp.asarray(tok.encode(p) % cfg.vocab),
+                             (S0 - len(p), 0)) for p in prompts])
+    B, T = len(prompts), 24
+
+    logits, pcache, _ = tfm.forward(params, cfg, {"tokens": ids},
+                                    mode="prefill")
+    cache = tfm.init_cache(cfg, B, S0 + T)
+    cache = {k: v.at[:, :, :S0].set(pcache[k].astype(v.dtype))
+             for k, v in cache.items()}
+    nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    outs = [nxt]
+    decode = jax.jit(lambda p, c, t, pos: tfm.forward(
+        p, cfg, {"tokens": t}, mode="decode", cache=c, positions=pos,
+        cache_len=pos + 1)[:2])
+    for t in range(S0, S0 + T - 1):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        logits, cache = decode(params, cache, nxt, pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        outs.append(nxt)
+    gen = jnp.concatenate(outs, axis=1)
+    for p, g in zip(prompts, gen):
+        print(f"{p!r} -> {tok.decode(list(g))!r}")
+
+
+if __name__ == "__main__":
+    main()

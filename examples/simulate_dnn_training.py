@@ -1,0 +1,42 @@
+"""TrioSim example (paper §5.2): predict training step times for the
+assigned architectures across DP/TP/PP plans — the engine and the training
+framework meeting in one tool.
+
+  PYTHONPATH=src python examples/simulate_dnn_training.py [--arch ...]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config  # noqa: E402
+from repro.sims.opgraph import HW, analytic_step_us  # noqa: E402
+from repro.sims.triosim import simulate_step  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--layers", type=int, default=24,
+                    help="override depth to keep trace size CPU-friendly")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+    hw = HW()
+    print(f"{args.arch} ({cfg.param_count()/1e9:.2f}B params), "
+          f"batch 16 x seq 1024, {hw.flops/1e12:.0f} TF/s devices\n")
+    print(f"{'plan':>16s} {'sim_ms':>9s} {'analytic_ms':>12s} {'ratio':>6s}")
+    for dp, tp, pp in [(4, 1, 1), (1, 4, 1), (1, 1, 4), (2, 2, 1),
+                       (1, 2, 2)]:
+        r = simulate_step(cfg, batch=16, seq=1024, dp=dp, tp=tp, pp=pp,
+                          micro=4, hw=hw)
+        a = analytic_step_us(cfg, 16, 1024, dp, tp, pp, 4, hw)
+        print(f"dp{dp} tp{tp} pp{pp:>2d} {r['step_us']/1e3:>11.1f} "
+              f"{a/1e3:>12.1f} {r['step_us']/a:>6.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import (CheckpointManager, restore_checkpoint,  # noqa
+                         save_checkpoint)

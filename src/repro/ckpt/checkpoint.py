@@ -1,0 +1,192 @@
+"""Fault-tolerant checkpointing.
+
+* flat path-keyed .npz shards + JSON manifest, written atomically
+  (tmp-dir + rename) so a killed save never corrupts the latest checkpoint;
+* async save (background thread) so the train loop never blocks on I/O;
+* keep-last-k garbage collection;
+* **elastic restore**: checkpoints store logical arrays, not device
+  layouts — restore takes target shardings for whatever mesh the job
+  restarts on (different pod count included) and `device_put`s each leaf.
+
+At 1000+ nodes each host would write only its owned shard slices (the
+manifest already records per-leaf shapes to support that); in this
+single-process container the full arrays are written by rank 0.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{_SEP}{k}" if prefix
+                                else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{_SEP}{i}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten_into(flat, template):
+    def rec(t, prefix):
+        if isinstance(t, dict):
+            return {k: rec(t[k], f"{prefix}{_SEP}{k}" if prefix else str(k))
+                    for k in t}
+        if isinstance(t, (list, tuple)):
+            vals = [rec(v, f"{prefix}{_SEP}{i}") for i, v in enumerate(t)]
+            return type(t)(vals)
+        return flat[prefix]
+    return rec(template, "")
+
+
+def _to_numpy(v):
+    """npz-safe array: bf16 (or other non-native dtypes) stored as f32
+    exactly; the manifest records the logical dtype."""
+    a = np.asarray(v)
+    if a.dtype.kind not in "biufc":       # bfloat16 & friends (ml_dtypes)
+        return a.astype(np.float32), str(a.dtype)
+    return a, str(a.dtype)
+
+
+def save_checkpoint(path: str, tree, step: int, extra: dict | None = None):
+    """Atomic checkpoint write: <path>/step_<n>/{manifest.json, arrays.npz}"""
+    pairs = {k: _to_numpy(v) for k, v in _flatten(tree).items()}
+    flat = {k: p[0] for k, p in pairs.items()}
+    logical = {k: p[1] for k, p in pairs.items()}
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=path, prefix=".tmp_save_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in flat.items()})
+        manifest = {
+            "step": step, "time": time.time(),
+            "leaves": {k: {"shape": list(v.shape), "dtype": logical[k]}
+                       for k, v in flat.items()},
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+            json.dump(manifest, fh)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def restore_checkpoint(path: str, template, step: int | None = None,
+                       shardings=None):
+    """Restore into ``template``'s structure; reshard onto ``shardings``
+    (a matching tree of NamedShardings) if given — elastic restarts."""
+    steps = list_steps(path)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    step = steps[-1] if step is None else step
+    d = os.path.join(path, f"step_{step:08d}")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        flat = {}
+        for k in z.files:
+            v = z[k]
+            logical = manifest["leaves"][k]["dtype"]
+            if str(v.dtype) != logical:   # bf16 stored as f32
+                v = jax.numpy.asarray(v).astype(logical)
+            flat[k] = v
+    tree = _unflatten_into(flat, template)
+    if shardings is not None:
+        sh_flat = _flatten(shardings)
+        tree = _unflatten_into(
+            {k: jax.device_put(v, sh_flat[k])
+             for k, v in _flatten(tree).items()}, template)
+    else:
+        tree = jax.tree.map(lambda x: jax.numpy.asarray(x), tree)
+    # restore original dtypes (npz keeps them; bf16 roundtrips via jnp)
+    tmpl_flat = _flatten(template)
+    out_flat = _flatten(tree)
+    fixed = {}
+    for k, v in out_flat.items():
+        want = getattr(tmpl_flat[k], "dtype", None)
+        fixed[k] = v.astype(want) if want is not None and v.dtype != want \
+            else v
+    return _unflatten_into(fixed, template), manifest
+
+
+def list_steps(path: str):
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for d in os.listdir(path):
+        if d.startswith("step_"):
+            out.append(int(d.split("_")[1]))
+    return sorted(out)
+
+
+class CheckpointManager:
+    """Async save + keep-k GC + latest-step tracking."""
+
+    def __init__(self, path: str, keep: int = 3, async_save: bool = True):
+        self.path = path
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        os.makedirs(path, exist_ok=True)
+
+    def save(self, tree, step: int, extra: dict | None = None):
+        self.wait()
+        # materialize on host BEFORE backgrounding (donated buffers!)
+        flat_host = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.path, flat_host, step, extra)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            self.check()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.check()
+
+    def check(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    def restore(self, template, step=None, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.path, template, step, shardings)
+
+    def latest_step(self):
+        s = list_steps(self.path)
+        return s[-1] if s else None
+
+    def _gc(self):
+        steps = list_steps(self.path)
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,4 @@
+"""Assigned architecture configs (exact, from the task sheet) + reduced
+smoke variants + shape registry."""
+from .registry import ARCH_IDS, get_config, get_smoke_config  # noqa: F401
+from .shapes import SHAPES, applicable, cell_list  # noqa: F401

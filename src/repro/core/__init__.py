@@ -1,0 +1,18 @@
+"""repro.core — the Akita simulation engine, adapted to JAX/TPU.
+
+The paper's primary contribution: an architecture-agnostic, event-driven
+simulation engine with Smart Ticking, Availability Backpropagation,
+transparent parallelism, task-based tracing, real-time monitoring and trace
+visualization.  See DESIGN.md for the Go→JAX adaptation.
+"""
+from .component import ComponentKind, KindHandle, TickResult
+from .engine import SimBuilder, SimState, Simulation, Stats
+from .message import (MSG_WORDS, f2i, i2f, msg_new, msg_reply, opcode,
+                      payload, ready_time)
+from .ports import Ports
+
+__all__ = [
+    "ComponentKind", "KindHandle", "TickResult", "SimBuilder", "SimState",
+    "Simulation", "Stats", "Ports", "MSG_WORDS", "msg_new", "msg_reply",
+    "opcode", "payload", "ready_time", "f2i", "i2f",
+]

@@ -1,0 +1,476 @@
+"""The Akita engine in JAX: event-driven core + Smart Ticking (paper §3.2)
++ Availability Backpropagation + transparent vectorized parallelism (§3.3).
+
+Design (see DESIGN.md §3 for the hardware-adaptation rationale):
+
+* Instances of every component kind are rows of batched arrays; one *epoch* of
+  a jitted ``lax.while_loop`` advances virtual time straight to the next event
+  (``min`` over all wake times) — the event-driven jump that lets Smart
+  Ticking skip idle stretches entirely.
+* Smart Ticking's four rules (paper §3.2) are vectorized:
+    1. message arrival wakes the destination component at the arrival time;
+    2. an outgoing buffer going full→not-full wakes its owner;
+    3. a tick returning progress reschedules at ``t + period``; otherwise the
+       component sleeps (``next_tick = +inf``);
+    4. duplicate events are impossible by construction (wakes are ``min``-
+       scatters into a single per-component wake time).
+* Availability Backpropagation (paper Fig. 5): an incoming buffer going
+  full→not-full wakes the serving connection; the connection draining a source
+  port's outgoing buffer full→not-full wakes the upstream component — the
+  backward chain that makes the sleep rules lossless.
+* ``naive=True`` compiles the ablation engine — every component ticks every
+  cycle of its clock, connections attempt delivery every cycle — used by the
+  Fig. 9a/9b reproduction.  Both engines share the delivery/tick code, so the
+  hypothesis equivalence test can require *bit-identical* results.
+
+Parallelism is transparent exactly as the paper demands: ``tick_fn`` is
+single-instance, lock-free code; the engine vmaps it over instances (VPU
+lanes) and `repro.core.pdes` shards the instance axis over devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .component import ComponentKind, KindHandle, normalize_tick_output
+from .message import MSG_WORDS, W_DST, W_TIME, f2i, i2f
+from .ports import EPS, Ports
+
+INF = jnp.float32(jnp.inf)
+
+
+def _align_after(t, period):
+    """First grid point of ``period`` strictly after ``t``."""
+    return (jnp.floor(t / period + EPS) + 1.0) * period
+
+
+def _align_at_or_after(t, period):
+    """First grid point of ``period`` at or after ``t``."""
+    return jnp.ceil(t / period - EPS) * period
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Stats:
+    epochs: jax.Array          # i32 — while-loop iterations executed
+    ticks: jax.Array           # i32 — component ticks executed
+    progress_ticks: jax.Array  # i32 — ticks that made forward progress
+    delivered: jax.Array       # i32 — messages moved by connections
+    busy: jax.Array            # [NC] i32 — per-component progressing ticks
+
+    @staticmethod
+    def zero(n_comp):
+        z = jnp.zeros((), jnp.int32)
+        return Stats(z, z, z, z, jnp.zeros((n_comp,), jnp.int32))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimState:
+    time: jax.Array            # f32 scalar — virtual time in cycles
+    next_tick: jax.Array       # [NC] f32 — per-component wake time (+inf asleep)
+    conn_wake: jax.Array       # [C] f32 — per-connection wake time
+    comp_state: dict           # kind name -> pytree with leading [N_k]
+    in_buf: jax.Array          # [PG, CAP, W] i32
+    in_head: jax.Array         # [PG] i32
+    in_cnt: jax.Array          # [PG] i32
+    out_buf: jax.Array         # [PG, CAP, W] i32
+    out_head: jax.Array        # [PG] i32
+    out_cnt: jax.Array         # [PG] i32
+    rr: jax.Array              # [C] i32 — round-robin pointers
+    stats: Stats
+    buf_samples: jax.Array     # [S, PG] i32 in-buffer levels (0-size if off)
+    sample_idx: jax.Array      # i32
+    next_sample: jax.Array     # f32
+
+
+class SimBuilder:
+    """Builds a static topology: kinds, ports, connections (Akita §3.1)."""
+
+    def __init__(self, msg_words: int = MSG_WORDS):
+        assert msg_words == MSG_WORDS
+        self.kinds: list[ComponentKind] = []
+        self._kind_ix: dict[str, int] = {}
+        self.conns: list[tuple[list[tuple[str, int, int]], float]] = []
+
+    def add_kind(self, kind: ComponentKind) -> KindHandle:
+        assert kind.name not in self._kind_ix, f"duplicate kind {kind.name}"
+        self._kind_ix[kind.name] = len(self.kinds)
+        self.kinds.append(kind)
+        return KindHandle(kind.name, len(self.kinds) - 1)
+
+    def connect(self, members, latency: float = 1.0):
+        """Connect 2+ ports with a round-robin arbitrated crossbar.
+
+        ``latency`` is in cycles and must be >= 1 (a "direct connection" is
+        one cycle — no zero-delay loops; see DESIGN.md).
+        """
+        assert latency >= 1.0 - 1e-6, "connection latency must be >= 1 cycle"
+        assert len(members) >= 2
+        self.conns.append(([tuple(m) for m in members], float(latency)))
+        return len(self.conns) - 1
+
+    # ------------------------------------------------------------------
+    def build(self, naive: bool = False, cap_phys: int | None = None,
+              sample_period: float = 0.0, max_samples: int = 1024,
+              ) -> "Simulation":
+        return Simulation(self, naive=naive, cap_phys=cap_phys,
+                          sample_period=sample_period,
+                          max_samples=max_samples)
+
+
+class Simulation:
+    """A compiled-topology simulation instance."""
+
+    def __init__(self, b: SimBuilder, naive: bool, cap_phys: int | None,
+                 sample_period: float, max_samples: int):
+        self.kinds = list(b.kinds)
+        self.naive = naive
+        self.sample_period = float(sample_period)
+        self.max_samples = int(max_samples) if sample_period > 0 else 0
+
+        # --- component + port numbering ---------------------------------
+        self.comp_base, self.port_base = [], []
+        nc = pg = 0
+        for k in self.kinds:
+            self.comp_base.append(nc)
+            self.port_base.append(pg)
+            nc += k.n_instances
+            pg += k.n_instances * k.n_ports
+        self.n_comp, self.n_ports_g = nc, pg
+
+        periods = np.concatenate([k.periods() for k in self.kinds]) \
+            if self.kinds else np.zeros((0,), np.float32)
+        caps = np.concatenate([k.caps().reshape(-1) for k in self.kinds]) \
+            if self.kinds else np.zeros((0,), np.int32)
+        port_owner = np.concatenate([
+            np.repeat(np.arange(k.n_instances, dtype=np.int32) + self.comp_base[i],
+                      k.n_ports)
+            for i, k in enumerate(self.kinds)]) if self.kinds else np.zeros((0,), np.int32)
+        self.cap_phys = int(cap_phys or max(4, caps.max(initial=1)))
+        assert caps.max(initial=1) <= self.cap_phys
+
+        # --- connections -------------------------------------------------
+        def pid(ref):
+            name, inst, port = ref
+            ki = b._kind_ix[name]
+            k = self.kinds[ki]
+            assert 0 <= inst < k.n_instances and 0 <= port < k.n_ports, ref
+            return self.port_base[ki] + inst * k.n_ports + port
+
+        n_conn = max(1, len(b.conns))
+        max_m = max([len(m) for m, _ in b.conns], default=2)
+        member = np.full((n_conn, max_m), -1, np.int32)
+        latency = np.ones((n_conn,), np.float32)
+        port_conn = np.full((pg,), -1, np.int32)
+        peer = np.full((pg,), -1, np.int32)
+        for c, (members, lat) in enumerate(b.conns):
+            pids = [pid(m) for m in members]
+            assert len(set(pids)) == len(pids), "port connected twice"
+            for j, p in enumerate(pids):
+                assert port_conn[p] == -1, "each port is served by one connection"
+                member[c, j] = p
+                port_conn[p] = c
+            latency[c] = lat
+            if len(pids) == 2:
+                peer[pids[0]], peer[pids[1]] = pids[1], pids[0]
+        self.n_conn, self.max_m = n_conn, max_m
+
+        # --- constants on device -----------------------------------------
+        self.c = dict(
+            periods=jnp.asarray(periods), caps=jnp.asarray(caps),
+            port_owner=jnp.asarray(port_owner), member=jnp.asarray(member),
+            latency=jnp.asarray(latency), port_conn=jnp.asarray(port_conn),
+            peer=jnp.asarray(peer),
+        )
+        self._run_jit = jax.jit(self._run, static_argnames=("max_epochs",))
+
+    # ------------------------------------------------------------------
+    def port_id(self, kind_name: str, inst: int, port: int = 0) -> int:
+        """Global port id for (kind, instance, port) — for explicit addressing."""
+        for ki, k in enumerate(self.kinds):
+            if k.name == kind_name:
+                assert 0 <= inst < k.n_instances and 0 <= port < k.n_ports
+                return self.port_base[ki] + inst * k.n_ports + port
+        raise KeyError(kind_name)
+
+    def comp_id(self, kind_name: str, inst: int) -> int:
+        for ki, k in enumerate(self.kinds):
+            if k.name == kind_name:
+                return self.comp_base[ki] + inst
+        raise KeyError(kind_name)
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> SimState:
+        pgt, cap, w = self.n_ports_g, self.cap_phys, MSG_WORDS
+        next_tick = []
+        for k in self.kinds:
+            t0 = INF if k.start_asleep else 0.0
+            next_tick.append(jnp.full((k.n_instances,), t0, jnp.float32))
+        return SimState(
+            time=jnp.float32(0.0),
+            next_tick=(jnp.concatenate(next_tick) if next_tick
+                       else jnp.zeros((0,), jnp.float32)),
+            conn_wake=jnp.full((self.n_conn,), INF),
+            comp_state={k.name: k.init_state for k in self.kinds},
+            in_buf=jnp.zeros((pgt, cap, w), jnp.int32),
+            in_head=jnp.zeros((pgt,), jnp.int32),
+            in_cnt=jnp.zeros((pgt,), jnp.int32),
+            out_buf=jnp.zeros((pgt, cap, w), jnp.int32),
+            out_head=jnp.zeros((pgt,), jnp.int32),
+            out_cnt=jnp.zeros((pgt,), jnp.int32),
+            rr=jnp.zeros((self.n_conn,), jnp.int32),
+            stats=Stats.zero(self.n_comp),
+            # min 1 row: zero-sized arrays break shard_map sharding (pdes)
+            buf_samples=jnp.zeros((max(self.max_samples, 1), pgt), jnp.int32),
+            sample_idx=jnp.int32(0),
+            next_sample=jnp.float32(self.sample_period if self.sample_period
+                                    else jnp.inf),
+        )
+
+    # ------------------------------------------------------------------
+    # Delivery phase: round-robin arbitrated crossbar per connection.
+    def _deliver(self, s: SimState, t, active, wake_comp):
+        c = self.c
+        C, M = self.n_conn, self.max_m
+        mp = c["member"]                       # [C, M]
+        valid = mp >= 0
+        mps = jnp.maximum(mp, 0)
+        have = (s.out_cnt[mps] > 0) & valid & active[:, None]
+        head = s.out_buf[mps, s.out_head[mps]]           # [C, M, W]
+        dst = head[:, :, W_DST]
+        dsts = jnp.clip(dst, 0, self.n_ports_g - 1)
+        space = s.in_cnt[dsts] < c["caps"][dsts]
+        req = have & space & (dst >= 0)
+        prio = (jnp.arange(M, dtype=jnp.int32)[None, :] - s.rr[:, None]) % M
+        # m loses if some m2 requests the same destination with lower prio.
+        beats = (req[:, None, :] & (dst[:, :, None] == dst[:, None, :])
+                 & (prio[:, None, :] < prio[:, :, None]))
+        win = req & ~jnp.any(beats, axis=2)              # [C, M]
+
+        win_f = win.reshape(-1)
+        drop_p = jnp.int32(self.n_ports_g)               # out-of-bounds => drop
+        src_f = jnp.where(win_f, mps.reshape(-1), drop_p)
+        dst_f = jnp.where(win_f, dsts.reshape(-1), drop_p)
+        lat_f = jnp.repeat(c["latency"], M)
+        arrive = t + lat_f
+        msg_f = head.reshape(-1, MSG_WORDS).at[:, W_TIME].set(f2i(arrive))
+
+        full_before_out = s.out_cnt == c["caps"]
+        # pop winners from source out-buffers
+        out_cnt = s.out_cnt.at[src_f].add(-1, mode="drop")
+        out_head = s.out_head.at[src_f].add(1, mode="drop") % self.cap_phys
+        # push into destination in-buffers
+        tail_f = (s.in_head[dst_f % self.n_ports_g]
+                  + s.in_cnt[dst_f % self.n_ports_g]) % self.cap_phys
+        in_buf = s.in_buf.at[dst_f, tail_f].set(msg_f, mode="drop")
+        in_cnt = s.in_cnt.at[dst_f].add(1, mode="drop")
+
+        # Rule 1: message arrival wakes the destination component.
+        drop_c = jnp.int32(self.n_comp)
+        own_dst = jnp.where(win_f, c["port_owner"][dst_f % self.n_ports_g], drop_c)
+        per_dst = c["periods"][own_dst % max(self.n_comp, 1)]
+        wake_comp = wake_comp.at[own_dst].min(
+            _align_at_or_after(arrive, per_dst), mode="drop")
+        # Rule 2 / backprop forward half: freed source out-buffer wakes owner.
+        freed = win_f & full_before_out[src_f % self.n_ports_g]
+        own_src = jnp.where(freed, c["port_owner"][src_f % self.n_ports_g], drop_c)
+        per_src = c["periods"][own_src % max(self.n_comp, 1)]
+        wake_comp = wake_comp.at[own_src].min(
+            _align_after(t, per_src), mode="drop")
+
+        # round-robin pointer: advance past the last-served winner
+        gp = jnp.where(win, prio, -1)
+        any_win = jnp.any(win, axis=1)
+        last = jnp.argmax(gp, axis=1).astype(jnp.int32)
+        rr = jnp.where(any_win, (last + 1) % M, s.rr)
+
+        # connection self-scheduling: if it delivered and work remains, wake
+        # next cycle; otherwise sleep (backprop / sends will wake it).
+        pending = jnp.any(valid & (out_cnt[mps] > 0), axis=1)
+        nw = jnp.where(any_win & pending, _align_after(t, 1.0), INF)
+        conn_wake = jnp.where(active, nw, s.conn_wake)
+
+        delivered = jnp.sum(win_f.astype(jnp.int32))
+        s = dataclasses.replace(
+            s, in_buf=in_buf, in_cnt=in_cnt, out_buf=s.out_buf,
+            out_cnt=out_cnt, out_head=out_head, rr=rr, conn_wake=conn_wake,
+            stats=dataclasses.replace(s.stats,
+                                      delivered=s.stats.delivered + delivered))
+        return s, wake_comp
+
+    # ------------------------------------------------------------------
+    # Tick phase: vmap each kind's tick_fn over its to-run instances.
+    def _tick_kinds(self, s: SimState, t, wake_conn):
+        c = self.c
+        next_tick = s.next_tick
+        in_buf, in_head, in_cnt = s.in_buf, s.in_head, s.in_cnt
+        out_buf, out_head, out_cnt = s.out_buf, s.out_head, s.out_cnt
+        comp_state = dict(s.comp_state)
+        total_ticks = jnp.int32(0)
+        total_prog = jnp.int32(0)
+        busy = s.stats.busy
+
+        for ki, kind in enumerate(self.kinds):
+            n, p = kind.n_instances, kind.n_ports
+            cb, pb = self.comp_base[ki], self.port_base[ki]
+            csl = slice(cb, cb + n)
+            psl = slice(pb, pb + n * p)
+            if self.naive:
+                mask = jnp.abs(jnp.remainder(t, c["periods"][csl])) < EPS
+                mask = mask | (jnp.abs(jnp.remainder(t, c["periods"][csl])
+                                       - c["periods"][csl]) < EPS)
+            else:
+                mask = next_tick[csl] <= t + EPS
+
+            sh = lambda a: a[psl].reshape(n, p, *a.shape[1:])
+            gid = jnp.arange(pb, pb + n * p, dtype=jnp.int32).reshape(n, p)
+
+            def one(st_i, ib, ih, ic, ob, oh, oc, cp, g, pe, kind=kind):
+                ports = Ports(ib, ih, ic, ob, oh, oc, cp, g, pe,
+                              jnp.asarray(t, jnp.float32))
+                st2, ports2, res = normalize_tick_output(
+                    kind.tick_fn(st_i, ports, jnp.asarray(t, jnp.float32)))
+                return (st2, ports2.in_buf, ports2.in_head, ports2.in_cnt,
+                        ports2.out_buf, ports2.out_head, ports2.out_cnt,
+                        res.progress, res.next_time)
+
+            (st2, ib2, ih2, ic2, ob2, oh2, oc2, prog, nxt) = jax.vmap(one)(
+                comp_state[kind.name], sh(in_buf), sh(in_head), sh(in_cnt),
+                sh(out_buf), sh(out_head), sh(out_cnt),
+                c["caps"][psl].reshape(n, p), gid,
+                c["peer"][psl].reshape(n, p))
+
+            def sel(new, old, m=mask):
+                mm = m.reshape(m.shape + (1,) * (new.ndim - 1))
+                return jnp.where(mm, new, old)
+
+            comp_state[kind.name] = jax.tree.map(
+                lambda a, b: sel(a, b), st2, comp_state[kind.name])
+            fl = lambda a: a.reshape(n * p, *a.shape[2:])
+            pmask = jnp.repeat(mask, p)
+
+            def psel(new, old):
+                mm = pmask.reshape(pmask.shape + (1,) * (new.ndim - 1))
+                return jnp.where(mm, new, old)
+
+            ic_old = in_cnt[psl]
+            oc_old = out_cnt[psl]
+            in_buf = in_buf.at[psl].set(psel(fl(ib2), in_buf[psl]))
+            in_head = in_head.at[psl].set(psel(fl(ih2), in_head[psl]))
+            in_cnt = in_cnt.at[psl].set(psel(fl(ic2), in_cnt[psl]))
+            out_buf = out_buf.at[psl].set(psel(fl(ob2), out_buf[psl]))
+            out_head = out_head.at[psl].set(psel(fl(oh2), out_head[psl]))
+            out_cnt = out_cnt.at[psl].set(psel(fl(oc2), out_cnt[psl]))
+
+            prog = prog & mask
+            if not self.naive:
+                # Rule 3: progress => next cycle; no progress => sleep.
+                base = jnp.where(prog, _align_after(t, c["periods"][csl]), INF)
+                custom = jnp.where(nxt > -0.5, jnp.maximum(nxt, t + EPS), base)
+                # In-flight arrivals: a ticked component must not sleep past
+                # the ready time of a message already in its buffers (rule 1
+                # for arrivals whose delivery preceded this tick).  Ready-now
+                # messages do NOT re-wake — unblocking is backprop's job.
+                hb = in_buf[psl][:, :, W_TIME]              # [n*p, CAP]
+                hr = i2f(jnp.take_along_axis(
+                    hb, in_head[psl][:, None], axis=1)[:, 0])
+                pend = (in_cnt[psl] > 0) & (hr > t + EPS)
+                w = jnp.where(pend, hr, INF).reshape(n, p)
+                arr = _align_at_or_after(jnp.min(w, axis=1),
+                                         c["periods"][csl])
+                custom = jnp.minimum(custom, arr)
+                next_tick = next_tick.at[csl].set(
+                    jnp.where(mask, custom, next_tick[csl]))
+
+            # Availability Backpropagation (backward half): incoming buffer
+            # full->not-full wakes the serving connection; any new send wakes
+            # the connection too.
+            caps_p = c["caps"][psl]
+            ic_new, oc_new = in_cnt[psl], out_cnt[psl]
+            in_freed = (ic_old == caps_p) & (ic_new < caps_p)
+            sent = oc_new > oc_old
+            wake_p = in_freed | sent
+            drop_c = jnp.int32(self.n_conn)
+            conns = jnp.where(wake_p, c["port_conn"][psl], drop_c)
+            conns = jnp.where(conns < 0, drop_c, conns)
+            wake_conn = wake_conn.at[conns].min(_align_after(t, 1.0),
+                                                mode="drop")
+
+            total_ticks += jnp.sum(mask.astype(jnp.int32))
+            total_prog += jnp.sum(prog.astype(jnp.int32))
+            busy = busy.at[csl].add(prog.astype(jnp.int32))
+
+        stats = dataclasses.replace(
+            s.stats, ticks=s.stats.ticks + total_ticks,
+            progress_ticks=s.stats.progress_ticks + total_prog, busy=busy)
+        s = dataclasses.replace(
+            s, next_tick=next_tick, comp_state=comp_state, in_buf=in_buf,
+            in_head=in_head, in_cnt=in_cnt, out_buf=out_buf,
+            out_head=out_head, out_cnt=out_cnt, stats=stats)
+        return s, wake_conn
+
+    # ------------------------------------------------------------------
+    def _epoch(self, s: SimState, until):
+        if self.naive:
+            t = s.time  # process the current cycle, then advance by one
+            active = jnp.ones((self.n_conn,), bool)
+        else:
+            t = jnp.minimum(jnp.min(s.next_tick) if self.n_comp else INF,
+                            jnp.min(s.conn_wake))
+            if self.max_samples:
+                t = jnp.minimum(t, s.next_sample)
+            active = s.conn_wake <= t + EPS
+
+        wake_comp = jnp.full((self.n_comp,), INF)
+        wake_conn = jnp.full((self.n_conn,), INF)
+        s = dataclasses.replace(s, time=t)
+        s, wake_comp = self._deliver(s, t, active, wake_comp)
+        s, wake_conn = self._tick_kinds(s, t, wake_conn)
+        s = dataclasses.replace(
+            s,
+            next_tick=jnp.minimum(s.next_tick, wake_comp),
+            conn_wake=jnp.minimum(s.conn_wake, wake_conn),
+            stats=dataclasses.replace(s.stats, epochs=s.stats.epochs + 1))
+        if self.max_samples:
+            do = s.next_sample <= t + EPS
+            row = s.sample_idx % self.max_samples
+            s = dataclasses.replace(
+                s,
+                buf_samples=jnp.where(
+                    do, s.buf_samples.at[row].set(s.in_cnt), s.buf_samples),
+                sample_idx=s.sample_idx + do.astype(jnp.int32),
+                next_sample=jnp.where(do, s.next_sample + self.sample_period,
+                                      s.next_sample))
+        if self.naive:
+            s = dataclasses.replace(s, time=t + 1.0)
+        return s
+
+    def _next_event(self, s: SimState):
+        t = jnp.min(s.next_tick) if self.n_comp else INF
+        t = jnp.minimum(t, jnp.min(s.conn_wake))
+        if self.max_samples:
+            t = jnp.minimum(t, s.next_sample)
+        return t
+
+    def _run(self, s: SimState, until, max_epochs):
+        until = jnp.asarray(until, jnp.float32)
+
+        def cond(s):
+            if self.naive:
+                more = s.time <= until + EPS
+            else:
+                more = self._next_event(s) <= until + EPS
+            return more & (s.stats.epochs < max_epochs)
+
+        return jax.lax.while_loop(cond, lambda s: self._epoch(s, until), s)
+
+    def run(self, state: SimState, until: float,
+            max_epochs: int = 2_000_000) -> SimState:
+        """Advance the simulation to virtual time ``until`` (cycles)."""
+        assert until < 2 ** 24, "float32 cycle precision bound (DESIGN.md)"
+        return self._run_jit(state, until, max_epochs=max_epochs)

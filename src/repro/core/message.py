@@ -1,0 +1,68 @@
+"""Fixed-width message records (Akita §3.1 'Message').
+
+Messages are pure-data int32 records of ``MSG_WORDS`` words:
+
+  w0  opcode      user-defined message/opcode id (0 is reserved: empty slot)
+  w1  src port    global port id (filled by ``Ports.send``)
+  w2  dst port    global port id (-1 = "use the port's default peer")
+  w3  ready time  f32 virtual time, bitcast into i32 (stamped by the connection)
+  w4..w7          payload words (user-defined; bitcast floats if needed)
+
+The fixed width is the TPU-native analogue of Akita's typed Go message structs:
+static shapes let buffers live in arrays and messages move as vector ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MSG_WORDS = 8
+_PAYLOAD0 = 4
+N_PAYLOAD = MSG_WORDS - _PAYLOAD0
+
+# Word indices.
+W_OP = 0
+W_SRC = 1
+W_DST = 2
+W_TIME = 3
+
+
+def f2i(x):
+    """Bitcast float32 -> int32 (for storing times/floats in payload words)."""
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.int32)
+
+
+def i2f(x):
+    """Bitcast int32 -> float32."""
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.int32), jnp.float32)
+
+
+def msg_new(opcode, dst=-1, p0=0, p1=0, p2=0, p3=0):
+    """Build a message. ``dst`` < 0 means "send to the port's default peer"."""
+    return jnp.stack([
+        jnp.asarray(opcode, jnp.int32),
+        jnp.asarray(-1, jnp.int32),
+        jnp.asarray(dst, jnp.int32),
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(p0, jnp.int32),
+        jnp.asarray(p1, jnp.int32),
+        jnp.asarray(p2, jnp.int32),
+        jnp.asarray(p3, jnp.int32),
+    ])
+
+
+def msg_reply(msg, opcode, p0=0, p1=0, p2=0, p3=0):
+    """Build a reply addressed to the sender of ``msg``."""
+    return msg_new(opcode, dst=msg[W_SRC], p0=p0, p1=p1, p2=p2, p3=p3)
+
+
+def opcode(msg):
+    return msg[..., W_OP]
+
+
+def payload(msg, i):
+    return msg[..., _PAYLOAD0 + i]
+
+
+def ready_time(msg):
+    return i2f(msg[..., W_TIME])

@@ -1,0 +1,166 @@
+"""AkitaRTM-lite: real-time monitoring of running simulations (paper §3.5).
+
+The browser dashboard is replaced by a terminal/JSON dashboard plus an
+optional stdlib HTTP endpoint (AkitaRTM "spawns a server when any Akita-based
+simulation starts"); the *data model* is the same:
+
+* simulation progress (virtual time, epochs, ticks, progress ratio);
+* component inspection (read any component's state fields live);
+* buffer-level **bottleneck analyzer** — in a successful simulation all
+  buffers drain; persistently non-empty buffers mark the stalled consumer
+  (paper's hang-diagnosis recipe);
+* **hang detection** — virtual time advancing with no progress ticks, or no
+  events left before the horizon;
+* ``force_tick`` — force-trigger a component's tick (the paper's breakpoint
+  debugging aid).
+
+Implementation: the monitor runs the simulation in host-side chunks
+(``run(until=t+chunk)``); between chunks the jitted state is inspected.  This
+is the chunked analogue of RTM sampling a live Go process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Monitor:
+    def __init__(self, sim, state, domain=None, http_port: int | None = None):
+        self.sim = sim
+        self.state = state
+        self.domain = domain
+        self.history: list[dict] = []
+        self._httpd = None
+        if http_port is not None:
+            self._serve(http_port)
+
+    # ------------------------------------------------------------------
+    def status(self) -> dict:
+        s = self.state
+        st = s.stats
+        ticks = int(st.ticks)
+        return {
+            "virtual_time": float(s.time),
+            "epochs": int(st.epochs),
+            "ticks": ticks,
+            "progress_ticks": int(st.progress_ticks),
+            "progress_ratio": float(int(st.progress_ticks) / max(ticks, 1)),
+            "delivered": int(st.delivered),
+            "pending_messages": int(jnp.sum(s.in_cnt) + jnp.sum(s.out_cnt)),
+        }
+
+    def inspect(self, kind: str, inst: int) -> dict:
+        """Live component state inspection (RTM's component detail view)."""
+        tree = self.state.comp_state[kind]
+        import jax
+        return {f"f{i}" if not isinstance(k, str) else k:
+                np.asarray(v[inst]).tolist()
+                for (k, v), i in zip(
+                    (tree.items() if isinstance(tree, dict) else
+                     enumerate(jax.tree.leaves(tree))),
+                    range(10 ** 9))} if isinstance(tree, dict) else {
+            f"leaf{i}": np.asarray(v[inst]).tolist()
+            for i, v in enumerate(__import__("jax").tree.leaves(tree))}
+
+    def bottleneck_report(self, top: int = 5) -> list[dict]:
+        """Fullest buffers first — the RTM Bottleneck Analyzer."""
+        s = self.state
+        in_cnt = np.asarray(s.in_cnt)
+        out_cnt = np.asarray(s.out_cnt)
+        rows = []
+        for ki, k in enumerate(self.sim.kinds):
+            pb = self.sim.port_base[ki]
+            for inst in range(k.n_instances):
+                for p in range(k.n_ports):
+                    g = pb + inst * k.n_ports + p
+                    if in_cnt[g] or out_cnt[g]:
+                        rows.append({
+                            "port": f"{k.name}[{inst}].p{p}",
+                            "in_level": int(in_cnt[g]),
+                            "out_level": int(out_cnt[g]),
+                            "stalled_consumer": bool(in_cnt[g] > 0),
+                        })
+        rows.sort(key=lambda r: -(r["in_level"] + r["out_level"]))
+        return rows[:top]
+
+    def force_tick(self, kind: str, inst: int):
+        """Force-trigger a tick on a suspect component (paper §3.5)."""
+        cid = self.sim.comp_id(kind, inst)
+        self.state = dataclasses.replace(
+            self.state,
+            next_tick=self.state.next_tick.at[cid].set(self.state.time))
+        self.state = self.sim.run(self.state, until=float(self.state.time))
+        return self.status()
+
+    # ------------------------------------------------------------------
+    def run_monitored(self, until: float, chunk: float = 1000.0,
+                      hang_chunks: int = 3, verbose: bool = True):
+        """Run to ``until`` in chunks, reporting progress and detecting hangs.
+
+        Returns (final_state, hang_detected).
+        """
+        stall = 0
+        last_prog = -1
+        t = float(self.state.time)
+        while t < until:
+            t = min(t + chunk, until)
+            tk = (self.domain.start_task("monitor", "chunk", "engine")
+                  if self.domain else None)
+            self.state = self.sim.run(self.state, until=t)
+            if tk:
+                self.domain.end_task(tk)
+            stat = self.status()
+            self.history.append(stat)
+            if verbose:
+                print(f"[RTM] vt={stat['virtual_time']:>10.1f} "
+                      f"epochs={stat['epochs']:>8d} "
+                      f"progress={stat['progress_ratio']:.2f} "
+                      f"pending={stat['pending_messages']}")
+            prog = stat["progress_ticks"]
+            if prog == last_prog and stat["pending_messages"] > 0:
+                stall += 1
+                if stall >= hang_chunks:
+                    if verbose:
+                        print("[RTM] HANG detected — bottleneck analysis:")
+                        for row in self.bottleneck_report():
+                            print("   ", row)
+                    return self.state, True
+            else:
+                stall = 0
+            last_prog = prog
+            if stat["pending_messages"] == 0 and \
+                    float(self.state.time) >= until:
+                break
+        return self.state, False
+
+    # ------------------------------------------------------------------
+    def _serve(self, port: int):
+        """Optional stdlib HTTP endpoint: GET /status, /bottlenecks."""
+        from http.server import BaseHTTPRequestHandler, HTTPServer
+        mon = self
+
+        class H(BaseHTTPRequestHandler):
+            def do_GET(self):
+                body = json.dumps(
+                    mon.status() if self.path != "/bottlenecks"
+                    else mon.bottleneck_report()).encode()
+                self.send_response(200)
+                self.send_header("Content-Type", "application/json")
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):
+                pass
+
+        self._httpd = HTTPServer(("127.0.0.1", port), H)
+        threading.Thread(target=self._httpd.serve_forever,
+                         daemon=True).start()
+
+    def close(self):
+        if self._httpd:
+            self._httpd.shutdown()

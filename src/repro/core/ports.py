@@ -1,0 +1,102 @@
+"""Batched ring-buffer ports (Akita §3.1 'Port').
+
+Each port owns an incoming and an outgoing FIFO ring buffer.  Globally, all
+ports of all component instances live in flat arrays indexed by a *global port
+id* so connections can deliver with pure scatter/gather ops.  A component's
+``tick_fn`` sees only its own instance's slice through the :class:`Ports`
+view, whose ``recv``/``send``/``peek`` mirror Akita's port API — functional
+(they return a new view) but reading like cycle-based code.
+
+Send rejects when the outgoing buffer is full (returns ``ok=False``) exactly
+like Akita; the engine uses the resulting full/not-full transitions for Smart
+Ticking rule 2 and Availability Backpropagation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .message import MSG_WORDS, W_DST, W_SRC, W_TIME, i2f
+
+EPS = 1e-3
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Ports:
+    """Per-instance view over this component's ports.
+
+    Arrays are shaped ``[P, ...]`` where ``P`` is the number of ports the
+    component kind declares.  ``t`` is the current virtual time (cycles).
+    """
+
+    in_buf: jax.Array   # [P, CAP, W] i32
+    in_head: jax.Array  # [P] i32
+    in_cnt: jax.Array   # [P] i32
+    out_buf: jax.Array  # [P, CAP, W] i32
+    out_head: jax.Array  # [P] i32
+    out_cnt: jax.Array   # [P] i32
+    cap: jax.Array      # [P] i32 logical capacity (<= physical CAP)
+    gid: jax.Array      # [P] i32 global port ids
+    peer: jax.Array     # [P] i32 default peer port id (-1 if ambiguous)
+    t: jax.Array        # scalar f32
+
+    @property
+    def _cap_phys(self):
+        return self.in_buf.shape[1]
+
+    # -- incoming ---------------------------------------------------------
+    def peek(self, p):
+        """Return (msg, ok) for the head of port ``p``'s incoming buffer.
+
+        ``ok`` is False when the buffer is empty or the head message has not
+        yet arrived (its connection-stamped ready time is in the future).
+        """
+        msg = self.in_buf[p, self.in_head[p]]
+        ok = (self.in_cnt[p] > 0) & (i2f(msg[W_TIME]) <= self.t + EPS)
+        return msg, ok
+
+    def recv(self, p, when=True):
+        """Pop the head message of port ``p`` if present+ready and ``when``."""
+        msg, ok = self.peek(p)
+        ok = ok & jnp.asarray(when, bool)
+        oki = ok.astype(jnp.int32)
+        new = dataclasses.replace(
+            self,
+            in_head=self.in_head.at[p].set(
+                (self.in_head[p] + oki) % self._cap_phys),
+            in_cnt=self.in_cnt.at[p].add(-oki),
+        )
+        return msg, ok, new
+
+    # -- outgoing ---------------------------------------------------------
+    def can_send(self, p):
+        return self.out_cnt[p] < self.cap[p]
+
+    def send(self, p, msg, when=True):
+        """Append ``msg`` to port ``p``'s outgoing buffer (rejects if full).
+
+        Fills the source field and resolves ``dst < 0`` to the port's default
+        peer.  Returns ``(new_ports, ok)``.
+        """
+        ok = self.can_send(p) & jnp.asarray(when, bool)
+        oki = ok.astype(jnp.int32)
+        msg = msg.at[W_SRC].set(self.gid[p])
+        msg = msg.at[W_DST].set(
+            jnp.where(msg[W_DST] < 0, self.peer[p], msg[W_DST]))
+        tail = (self.out_head[p] + self.out_cnt[p]) % self._cap_phys
+        old = self.out_buf[p, tail]
+        new = dataclasses.replace(
+            self,
+            out_buf=self.out_buf.at[p, tail].set(jnp.where(ok, msg, old)),
+            out_cnt=self.out_cnt.at[p].add(oki),
+        )
+        return new, ok
+
+    def in_level(self, p):
+        return self.in_cnt[p]
+
+    def out_level(self, p):
+        return self.out_cnt[p]

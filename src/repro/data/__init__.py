@@ -1,0 +1,2 @@
+from .pipeline import (ByteTokenizer, DataPipeline,  # noqa: F401
+                       synthetic_batch)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as kernel.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper) and ref.py (pure-jnp oracle).  Validated in
+interpret mode on CPU; TPU is the lowering target (MXU-aligned block shapes,
+sequential minor grid dimension carrying scratch accumulators — the TPU-
+native substitute for CUDA thread-block programming).
+
+The Akita paper itself has no kernel-level contribution (it is engine
+infrastructure); these kernels belong to the training/serving framework the
+engine's workloads run on: flash_attention (train/prefill attention) and
+ssd (Mamba-2 chunked state-space scan).
+"""

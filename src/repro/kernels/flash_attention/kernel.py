@@ -1,0 +1,116 @@
+"""Flash attention (online softmax) Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention insight: instead of CUDA shared-memory
+tiles, KV blocks stream HBM->VMEM under explicit BlockSpecs; the innermost
+grid dimension (KV blocks) is sequential on TPU, so the running (max, denom,
+accumulator) live in VMEM scratch across iterations — no atomics, no
+cross-block reduction tree.  Block shapes default to MXU-aligned (128).
+
+Supports: causal masking, sliding windows (gemma2/hymba), logit softcap
+(gemma2/grok), GQA via index-map head folding (q head h reads kv head h//G).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale, causal, window, cap, block_q, block_k, n_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)                  # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    qp = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kp = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]                               # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "cap", "scale", "block_q",
+                              "block_k", "interpret", "n_kv_heads"))
+def flash_attention(q, k, v, *, n_kv_heads, causal=True, window=0, cap=0.0,
+                    scale=None, block_q=128, block_k=128, interpret=False):
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, KV, hd] -> [B, Sq, H, hd].
+
+    Self-attention positions (q_pos = kv_pos = iota).  GQA folded via the
+    kv BlockSpec index map.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // n_kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q, n_k = Sq // block_q, Sk // block_k
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // H) * KV + (bh % H) // G, ki, 0)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

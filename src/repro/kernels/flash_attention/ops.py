@@ -1,0 +1,23 @@
+"""jit'd wrapper matching the model-side attention call signature."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                    cap=0.0, scale=None, block_q=128, block_k=128,
+                    interpret=False):
+    """Self-attention entry point used by models.attention.attention_block.
+
+    ``q_pos``/``kv_pos`` must be the contiguous iota of self-attention (the
+    cache path uses the XLA decode attention instead); they are accepted for
+    signature parity and ignored — positions are derived from block indices
+    inside the kernel.
+    """
+    n_kv = k.shape[2]
+    w = int(window) if not hasattr(window, "shape") else 0  # traced => full
+    return kernel.flash_attention(
+        q, k, v, n_kv_heads=n_kv, causal=causal, window=w, cap=float(cap),
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: the blockwise online-softmax attention from the model
+library (numerically identical algorithm, no Pallas)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import blockwise_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0,
+                        scale=None):
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    kv_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32), (B, Sk))
+    return blockwise_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                               window=window, cap=cap, scale=scale)

@@ -1,0 +1,123 @@
+"""Mamba-2 SSD chunk-scan Pallas TPU kernel.
+
+TPU adaptation: the GPU implementation splits the chunk scan across thread
+blocks with a separate state-passing kernel; on TPU the chunk axis is the
+*sequential* minor grid dimension, so the inter-chunk SSM state lives in VMEM
+scratch and flows across grid steps — one kernel, no state round-trip to
+HBM.  Within a chunk everything is MXU matmuls (the "duality" insight):
+decay-masked C·Bᵀ attention plus a rank-N state update.
+
+Grid: (B*H, n_chunks).  Blocks: x (1, l, P), dt (1, l), B/C (1, l, N)
+with the B/C index map folding heads (shared across H — n_groups=1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                h_scr, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [l, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [l]
+    A = a_ref[0].astype(jnp.float32)          # scalar (per head)
+    B_ = b_ref[0].astype(jnp.float32)         # [l, N]
+    C_ = c_ref[0].astype(jnp.float32)         # [l, N]
+
+    a = dt * A                                # [l] log-decay per step
+    cum = jnp.cumsum(a)                       # [l]
+    seg = cum[:, None] - cum[None, :]         # [l, l]
+    li = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    # mask before exp (future entries overflow; see models/ssm.py)
+    L = jnp.exp(jnp.where(li >= lj, seg, -1e30))
+
+    # intra-chunk (dual/attention form): ((C·Bᵀ) ⊙ L ⊙ dt) @ x
+    cb = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    scores = cb * L * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += exp(cum) * (C @ h_prevᵀ);  h: [P, N]
+    h = h_scr[...]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C_, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: h = h * exp(Σa) + xᵀ @ (B ⊙ (dt · decay_to_end))
+    decay_out = jnp.exp(cum[-1] - cum)        # [l]
+    wB = B_ * (dt * decay_out)[:, None]       # [l, N]
+    contrib = jax.lax.dot_general(x, wB, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_scr[...] = h * jnp.exp(cum[-1]) + contrib
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        state_out_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd(xs, dt, A, B_, C_, chunk: int = 128, interpret: bool = False):
+    """xs: [B,S,H,P], dt: [B,S,H], A: [H], B_/C_: [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B, S, H, Pd = xs.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xt = xs.transpose(0, 2, 1, 3).reshape(B * H, S, Pd)
+    dtt = dt.transpose(0, 2, 1).reshape(B * H, S)
+    at = jnp.tile(A, B)                                       # [B*H]
+
+    def x_map(bh, ci):
+        return (bh, ci, 0)
+
+    def dt_map(bh, ci):
+        return (bh, ci)
+
+    def a_map(bh, ci):
+        return (bh,)
+
+    def bc_map(bh, ci):
+        return (bh // H, ci, 0)
+
+    def st_map(bh, ci):
+        return (bh, 0, 0)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Pd), x_map),
+            pl.BlockSpec((1, chunk), dt_map),
+            pl.BlockSpec((1,), a_map),
+            pl.BlockSpec((1, chunk, N), bc_map),
+            pl.BlockSpec((1, chunk, N), bc_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, Pd), x_map),
+            pl.BlockSpec((1, Pd, N), st_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, Pd), xs.dtype),
+            jax.ShapeDtypeStruct((B * H, Pd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, at, B_, C_)
+    return (y.reshape(B, H, S, Pd).transpose(0, 2, 1, 3),
+            state.reshape(B, H, Pd, N))

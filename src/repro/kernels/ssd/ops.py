@@ -1,0 +1,8 @@
+"""jit'd wrapper used by models.ssm when attn_impl selects the kernel."""
+from __future__ import annotations
+
+from . import kernel
+
+
+def ssd(xs, dt, A, B_, C_, chunk: int = 128, interpret: bool = False):
+    return kernel.ssd(xs, dt, A, B_, C_, chunk=chunk, interpret=interpret)

@@ -1,0 +1,2 @@
+"""Pure-jnp oracles: sequential recurrence + chunked dual form."""
+from repro.models.ssm import ssd_chunked, ssd_ref  # noqa: F401

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips ("data", "model").
+Multi-pod:  2x16x16 = 512 chips ("pod", "data", "model") — "pod" is the
+outer data-parallel/FSDP axis (DCN-ish in real deployments); nothing below
+binds to these sizes, so 1000+-node meshes are a parameter change here.
+
+NOTE: functions, not module constants — importing this module must never
+touch jax device state (device count is locked at first use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for the 8-fake-device subprocess tests."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_sim_mesh(n: int | None = None):
+    """1-D mesh over all devices for the sharded-PDES engine workload."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), ("sim",))

@@ -1,0 +1,302 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms per (arch × shape × mesh), in seconds:
+
+  compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+  memory     = HLO_bytes_per_chip / HBM_BW
+  collective = ring-model bytes on the wire per chip / ICI_BW
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD, per-chip
+program).  Collective bytes are parsed from ``compiled.as_text()``: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute's
+result type × ring factor, with ``replica_groups`` giving the group size g
+and while-loop trip counts (layer scans, microbatch loops) multiplying ops
+that live inside loop bodies.
+
+Hardware constants (TPU v5e-class, from the task sheet): 197 TFLOP/s bf16,
+819 GB/s HBM, 2×50 GB/s effective bidirectional ICI ring bandwidth per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 100e9          # 2 links/ring direction x 50 GB/s
+
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+          "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]\w*?)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    total_bytes: float                 # per-chip wire bytes (ring model)
+    count: int
+
+
+@dataclasses.dataclass
+class HloStats:
+    """Loop-aware totals parsed from post-SPMD HLO text."""
+    dot_flops: float                   # 2*M*N*K per dot × trip multipliers
+    result_bytes: float                # Σ op result bytes × multipliers
+    collectives: CollectiveStats
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not line.startswith((" ", "\t")):
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+_DEF_RE = re.compile(
+    r"^%?([\w\.\-]+)\s*=\s*([a-z]\w*\[[\d,]*\])\S*\s+([\w\-]+)\(")
+_DOT_RE = re.compile(
+    r"^%?[\w\.\-]+\s*=\s*([a-z]\w*\[[\d,]*\])\S*\s+dot\("
+    r"%?([\w\.\-]+), %?([\w\.\-]+)\), (.*)")
+# ops that move no bytes (aliased/metadata-only in the optimized program);
+# dynamic-update-slice is in-place on loop carries: only the update counts.
+_FREE_OPS = {"get-tuple-element", "tuple", "parameter", "bitcast",
+             "reshape", "constant", "iota", "after-all"}
+
+
+def _dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _comp_multipliers(comps) -> dict:
+    """Propagate while-loop trip counts to loop-body computations."""
+    whiles = []
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = re.search(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*"
+                          r"body=%?([\w\.\-]+)", ln)
+            if m:
+                whiles.append((cname, m.group(1), m.group(2)))
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = {}
+        for ln in lines:
+            m = re.match(r"^%?([\w\.\-]+)\s*=.*?constant\((\d+)\)", ln)
+            if m:
+                consts[m.group(1)] = int(m.group(2))
+        # the loop bound is the constant operand of the compare op
+        bounds = []
+        for ln in lines:
+            m = re.search(r"compare\(%?([\w\.\-]+), %?([\w\.\-]+)\)", ln)
+            if m:
+                for nm in m.groups():
+                    if nm in consts:
+                        bounds.append(consts[nm])
+        if bounds:
+            return max(bounds)
+        return max(consts.values()) if consts else 1
+
+    mult = {c: 1 for c in comps}
+    for _ in range(20):
+        changed = False
+        for parent, cond, body in whiles:
+            m = mult.get(parent, 1) * max(trip_count(cond), 1)
+            if mult.get(body, 1) != m:
+                mult[body] = m
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def parse_hlo(hlo_text: str, n_devices: int) -> HloStats:
+    """Loop-aware dot FLOPs, result-buffer bytes, and collective bytes."""
+    comps = _split_computations(hlo_text)
+    mult = _comp_multipliers(comps)
+
+    # global symbol table: array-typed defs (for dot/DUS operand shapes)
+    sym: dict[str, list[int]] = {}
+    sym_bytes: dict[str, int] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                sym[m.group(1)] = _dims(m.group(2))
+                sym_bytes[m.group(1)] = _type_bytes(m.group(2))
+
+    dot_flops = 0.0
+    result_bytes = 0.0
+    for cname, lines in comps.items():
+        k = mult.get(cname, 1)
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                opname = m.group(3)
+                if opname == "dynamic-update-slice":
+                    dm2 = re.search(
+                        r"dynamic-update-slice\(%?[\w\.\-]+, %?([\w\.\-]+)",
+                        ln)
+                    if dm2:
+                        result_bytes += sym_bytes.get(dm2.group(1), 0) * k
+                elif opname not in _FREE_OPS:
+                    result_bytes += _type_bytes(m.group(2)) * k
+            dm = _DOT_RE.match(ln)
+            if dm:
+                out_t, lhs, rhs, rest = dm.groups()
+                out_n = 1
+                for d in _dims(out_t):
+                    out_n *= d
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                K = 1
+                if cm and lhs in sym:
+                    lshape = sym[lhs]
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(lshape):
+                            K *= lshape[int(ci)]
+                dot_flops += 2.0 * out_n * K * k
+
+    coll = _parse_collectives_split(comps, mult, n_devices)
+    return HloStats(dot_flops, result_bytes, coll)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    return _parse_collectives_split(comps, _comp_multipliers(comps),
+                                    n_devices)
+
+
+def _parse_collectives_split(comps, mult, n_devices) -> CollectiveStats:
+    by_op: dict[str, float] = {}
+    count = 0
+    for cname, lines in comps.items():
+        k = mult.get(cname, 1)
+        for ln in lines:
+            m = re.match(r"%?[\w\.\-]+\s*=\s*(.+?)\s+([a-z\-]+)(?:-start)?\(",
+                         ln)
+            if not m:
+                continue
+            type_str, op = m.group(1), m.group(2)
+            if op not in _COLL:
+                continue
+            g = _group_size(ln, n_devices)
+            if g <= 1:
+                continue
+            b = _type_bytes(type_str)
+            ring = (g - 1) / g
+            if op == "all-reduce":
+                wire = 2 * b * ring
+            elif op == "reduce-scatter":
+                wire = b * (g - 1)          # result is the 1/g piece
+            elif op == "all-gather":
+                wire = b * ring
+            elif op == "all-to-all":
+                wire = b * ring
+            else:                           # collective-permute
+                wire = b
+            by_op[op] = by_op.get(op, 0.0) + wire * k
+            count += k
+    return CollectiveStats(by_op, sum(by_op.values()), count)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D forward (N = active params)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch      # decode: 1 token per sequence
+
+
+def analyze(compiled, cfg, shape, n_devices: int) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    # cost_analysis counts while-loop (layer-scan) bodies ONCE — parse the
+    # HLO with trip-count multipliers instead; keep cost_analysis as a floor.
+    hlo = parse_hlo(compiled.as_text(), n_devices)
+    flops = max(float(cost.get("flops", 0.0)), hlo.dot_flops)
+    # memory traffic proxy: every op result written once + read once at the
+    # fusion granularity of the optimized HLO (see DESIGN.md §6).
+    hbm_bytes = max(float(cost.get("bytes accessed", 0.0)),
+                    2.0 * hlo.result_bytes)
+    coll = hlo.collectives
+    mem = compiled.memory_analysis()
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": coll.total_bytes / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    bound = max(max(terms.values()), 1e-12)
+    if shape.kind == "decode" and mem is not None:
+        # decode is memory-bound by construction: the ideal step reads every
+        # argument byte (params + caches) exactly once.
+        ideal = mem.argument_size_in_bytes / HBM_BW
+    else:
+        ideal = (mf / n_devices) / PEAK_FLOPS
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": hbm_bytes,
+        "collective_bytes_per_chip": coll.total_bytes,
+        "collective_by_op": coll.bytes_by_op,
+        "collective_op_count": coll.count,
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf / n_devices,
+        "useful_flops_ratio": (mf / n_devices) / flops if flops else 0.0,
+        "step_lower_bound_s": max(terms.values()),
+        "ideal_step_s": ideal,
+        "roofline_fraction": min(1.0, ideal / bound),
+        "memory_per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "total_bytes": (mem.argument_size_in_bytes
+                            + mem.temp_size_in_bytes),
+        } if mem is not None else None,
+    }

@@ -1,0 +1,53 @@
+"""Serving launcher: continuous batching over a checkpoint (or fresh
+random weights for a topology demo).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --ckpt runs/train_demo --prompts "hello world" "the quick brown"
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--prompts", nargs="+", default=["hello world"])
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import ByteTokenizer
+    from repro.models import transformer as tfm
+    from repro.models.layers import init_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(tfm.model_specs(cfg), jax.random.PRNGKey(0))
+    if args.ckpt:
+        from repro.ckpt import restore_checkpoint
+        from repro.optim import adamw_init
+        state, manifest = restore_checkpoint(
+            args.ckpt, {"p": params, "o": adamw_init(params)})
+        params = state["p"]
+        print(f"restored step {manifest['step']} from {args.ckpt}")
+
+    tok = ByteTokenizer()
+    eng = ServeEngine(cfg, params, max_batch=args.max_batch,
+                      max_len=args.max_len)
+    for p in args.prompts:
+        eng.submit(tok.encode(p) % cfg.vocab, max_new=args.max_new)
+    done = eng.run_until_idle()
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"[{r.rid}] {tok.decode(list(r.prompt))!r} -> "
+              f"{tok.decode(r.out)!r}")
+
+
+if __name__ == "__main__":
+    main()

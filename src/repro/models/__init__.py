@@ -1,0 +1,1 @@
+"""repro.models — the framework model zoo (assigned architectures)."""

@@ -1,0 +1,171 @@
+"""GQA attention: RoPE, causal/sliding-window/alternating masks, logit
+softcap, and a blockwise online-softmax implementation (the "xla" path).
+
+The blockwise path scans over KV chunks carrying (max, denom, acc) — flash
+attention expressed in pure jnp.  It is numerically identical to the Pallas
+kernel (kernels/flash_attention) and serves as its oracle; it also keeps the
+compiled HLO's peak temp at O(S·chunk) instead of O(S²), which matters for
+the dry-run memory analysis.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PSpec, softcap
+
+NEG = -1e30
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) *
+                    jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [..., S, half]
+    ang = ang[..., None, :]                                   # [..., S, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def attn_specs(cfg):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": PSpec((d, H, hd), ("fsdp", "tensor_q", None)),
+        "wk": PSpec((d, KV, hd), ("fsdp", "tensor_kv", None)),
+        "wv": PSpec((d, KV, hd), ("fsdp", "tensor_kv", None)),
+        "wo": PSpec((H, hd, d), ("tensor_q", None, "fsdp")),
+    }
+
+
+def _mask(q_pos, kv_pos, causal, window):
+    """q_pos [B,Sq], kv_pos [B,Sk] -> bool [B,Sq,Sk]; kv_pos<0 = invalid.
+
+    ``window`` may be a traced scalar (per-layer alternating patterns inside
+    a layer scan); <=0 means full attention.
+    """
+    qp = q_pos[:, :, None]
+    kp = kv_pos[:, None, :]
+    m = kp >= 0
+    if causal:
+        m &= kp <= qp
+    w = jnp.asarray(window, jnp.int32)
+    m &= (w <= 0) | (qp - kp < w)
+    return m
+
+
+def blockwise_attention(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                        cap=0.0, scale=None, chunk=1024, probs_bf16=False):
+    """Online-softmax attention.
+
+    q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; q_pos: [B,Sq]; kv_pos: [B,Sk]
+    (kv_pos < 0 marks invalid cache slots).  Returns [B,Sq,H,hd].
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]                       # MLA: v head dim != qk head dim
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q.reshape(B, Sq, KV, G, hd)
+
+    def scores_of(kc, kvp):
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if cap:
+            s = softcap(s, cap)
+        m = _mask(q_pos, kvp, causal, window)           # [B,Sq,ck]
+        return jnp.where(m[:, None, None, :, :], s, NEG)
+
+    if Sk <= chunk:
+        s = scores_of(k, kv_pos)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+        return o.reshape(B, Sq, H, hd_v)
+
+    n = -(-Sk // chunk)
+    pad = n * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    ks = k.reshape(B, n, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n, chunk, KV, hd_v).transpose(1, 0, 2, 3, 4)
+    ps = kv_pos.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    m0 = jnp.full((B, KV, G, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd_v), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, kvp = inp
+        s = scores_of(kc, kvp)                           # [B,KV,G,Sq,ck]
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + jnp.sum(p, axis=-1)
+        if probs_bf16:   # perf knob: halve P·V read traffic (post-max safe)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(jnp.bfloat16),
+                            vc.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        acc2 = acc * corr[..., None] + pv
+        return (m2, l2, acc2), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+def attention_block(params, cfg, x, q_pos, *, window, cache=None,
+                    cache_len=None):
+    """Full attention sub-block: qkv proj, rope, attend, out proj.
+
+    Training/prefill: cache=None -> self-attention over x.
+    Decode: cache=(k_cache [B,S,KV,hd], v_cache) with new token(s) written at
+    q_pos; returns (out, new_cache).
+    """
+    B, Sq, _ = x.shape
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dke->bske", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dke->bske", x, params["wv"].astype(x.dtype))
+    q = rope(q, q_pos, cfg.rope_theta)
+    k = rope(k, q_pos, cfg.rope_theta)
+
+    if cache is None:
+        kv_pos = q_pos
+        kk, vv = k, v
+        new_cache = None
+    else:
+        ck, cv = cache
+        S = ck.shape[1]
+        # write new kv at positions q_pos (decode: Sq small)
+        idx = q_pos.astype(jnp.int32)                       # [B,Sq]
+        bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+        kk = ck.at[bidx, idx].set(k.astype(ck.dtype))
+        vv = cv.at[bidx, idx].set(v.astype(cv.dtype))
+        new_cache = (kk, vv)
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        limit = (cache_len if cache_len is not None
+                 else q_pos[:, -1:] + 1)                    # [B,1]
+        kv_pos = jnp.where(pos <= limit - 1, pos, -1)
+
+    if cfg.attn_impl in ("pallas", "pallas_interpret") and cache is None:
+        from repro.kernels.flash_attention import ops as fa
+        out = fa.flash_attention(
+            q, kk, vv, q_pos, kv_pos, causal=cfg.causal, window=window,
+            cap=cfg.attn_softcap,
+            interpret=cfg.attn_impl == "pallas_interpret")
+    else:
+        out = blockwise_attention(
+            q, kk, vv, q_pos, kv_pos, causal=cfg.causal, window=window,
+            cap=cfg.attn_softcap, probs_bf16=cfg.attn_probs_bf16)
+    o = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+    return o, new_cache

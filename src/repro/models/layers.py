@@ -1,0 +1,178 @@
+"""Parameter-spec machinery + basic layers (norms, MLPs, embeddings).
+
+Parameters are declared as :class:`PSpec` trees carrying logical sharding
+axes (``'fsdp'``, ``'tensor'`` or ``None`` per dim).  The same tree serves
+three uses:
+
+* ``init_params``      — materialize real arrays (tests, examples, training);
+* ``abstract_params``  — ShapeDtypeStructs for the multi-pod dry-run;
+* ``make_shardings``   — NamedShardings for a concrete mesh via axis rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: tuple
+    axes: tuple          # logical axis name per dim: 'fsdp' | 'tensor' | None
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def init_params(tree, key, dtype=jnp.bfloat16):
+    leaves = _leaves(tree)
+    keys = jax.random.split(key, len(leaves))
+    it = iter(keys)
+
+    def one(ps: PSpec):
+        k = next(it)
+        if ps.init == "zeros":
+            return jnp.zeros(ps.shape, dtype)
+        if ps.init == "ones":
+            return jnp.ones(ps.shape, dtype)
+        scale = ps.scale if ps.scale is not None else \
+            1.0 / math.sqrt(max(ps.shape[0], 1))
+        return (jax.random.normal(k, ps.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.map(one, tree, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def abstract_params(tree, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, dtype), tree,
+        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def partition_spec(ps: PSpec, rules: dict) -> P:
+    return P(*[rules.get(a) if a is not None else None for a in ps.axes])
+
+
+def make_shardings(tree, mesh, rules: dict):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, partition_spec(ps, rules)), tree,
+        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def make_pspecs(tree, rules: dict):
+    return jax.tree.map(lambda ps: partition_spec(ps, rules), tree,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def stack_layers(spec_fn, n_layers: int):
+    """Stack per-layer PSpec trees along a new leading (scan) axis."""
+    one = spec_fn()
+    return jax.tree.map(
+        lambda ps: PSpec((n_layers,) + ps.shape, (None,) + ps.axes,
+                         ps.init, ps.scale),
+        one, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, w, b=None, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    n = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    if b is not None:
+        n = n + b.astype(jnp.float32)
+    return n.astype(x.dtype)
+
+
+def norm(cfg, x, w):
+    return rmsnorm(x, w) if cfg.norm == "rms" else layernorm(x, w)
+
+
+def norm_spec(cfg):
+    init = "zeros" if cfg.norm == "rms" else "ones"
+    return PSpec((cfg.d_model,), (None,), init)
+
+
+def mlp_specs(d_model: int, d_ff: int, act: str):
+    if act == "swiglu":
+        return {
+            "wi": PSpec((d_model, d_ff), ("fsdp", "tensor")),
+            "wg": PSpec((d_model, d_ff), ("fsdp", "tensor")),
+            "wo": PSpec((d_ff, d_model), ("tensor", "fsdp")),
+        }
+    return {
+        "wi": PSpec((d_model, d_ff), ("fsdp", "tensor")),
+        "wo": PSpec((d_ff, d_model), ("tensor", "fsdp")),
+    }
+
+
+def mlp(params, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    else:
+        h = jax.nn.gelu(x @ params["wi"])
+    return h @ params["wo"]
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def embed_specs(cfg):
+    s = {"tok": PSpec((cfg.vocab_padded, cfg.d_model), ("tensor", "fsdp"),
+                      scale=1.0)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = PSpec((cfg.d_model, cfg.vocab_padded),
+                             ("fsdp", "tensor"))
+    if cfg.frontend == "audio":
+        s["frontend_proj"] = PSpec((cfg.frontend_dim, cfg.d_model),
+                                   (None, "fsdp"))
+    return s
+
+
+def embed(params, cfg, tokens):
+    e = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.norm == "rms" and cfg.final_softcap:   # gemma-style scaling
+        e = e * jnp.asarray(math.sqrt(cfg.d_model), e.dtype)
+    return e
+
+
+def unembed(params, cfg, x):
+    w = params["tok"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ w.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab:  # mask padding columns
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad, -1e30, logits)
+    return logits
+
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 0.0):
+    """Mean token cross-entropy (f32), optional validity mask + z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(loss)

@@ -1,0 +1,109 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — train + absorbed decode.
+
+MLA compresses KV into a low-rank latent c_kv (kv_lora dims) plus a shared
+RoPE key (qk_rope_dim).  Training/prefill materializes per-head K/V from the
+latent (matmul-friendly); decode uses the *absorbed* form — the K up-
+projection is folded into the query so attention runs directly against the
+cached latent, making the KV cache O(kv_lora + rope) per token instead of
+O(2·H·hd): 576 vs 32768 floats/token for the assigned config.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .attention import blockwise_attention, rope
+from .layers import PSpec
+
+
+def mla_specs(cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": PSpec((d, cfg.q_lora), ("fsdp", None)),
+        "wq_b": PSpec((cfg.q_lora, H, qd), (None, "tensor_q", None)),
+        "wkv_a": PSpec((d, cfg.kv_lora + cfg.qk_rope_dim), ("fsdp", None)),
+        "wk_b": PSpec((cfg.kv_lora, H, cfg.qk_nope_dim),
+                      (None, "tensor_q", None)),
+        "wv_b": PSpec((cfg.kv_lora, H, cfg.v_head_dim),
+                      (None, "tensor_q", None)),
+        "wo": PSpec((H, cfg.v_head_dim, d), ("tensor_q", None, "fsdp")),
+        "q_norm": PSpec((cfg.q_lora,), (None,), "zeros"),
+        "kv_norm": PSpec((cfg.kv_lora,), (None,), "zeros"),
+    }
+
+
+def _project_q(params, cfg, x, q_pos):
+    from .layers import rmsnorm
+    B, Sq, _ = x.shape
+    H = cfg.n_heads
+    qa = rmsnorm(x @ params["wq_a"].astype(x.dtype), params["q_norm"])
+    q = jnp.einsum("bsl,lhe->bshe", qa, params["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = rope(q_rope, q_pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_latent(params, cfg, x, pos):
+    from .layers import rmsnorm
+    kv = x @ params["wkv_a"].astype(x.dtype)
+    c_kv = rmsnorm(kv[..., :cfg.kv_lora], params["kv_norm"])
+    k_rope = rope(kv[..., cfg.kv_lora:][:, :, None, :], pos, cfg.rope_theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_block(params, cfg, x, q_pos, *, cache=None, cache_len=None,
+              window=0):
+    """cache: (c_kv [B,S,kv_lora], k_rope [B,S,rope]) latent cache."""
+    B, Sq, _ = x.shape
+    H = cfg.n_heads
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = _project_q(params, cfg, x, q_pos)
+    c_new, kr_new = _project_latent(params, cfg, x, q_pos)
+
+    if cache is None:
+        # Training/prefill: materialize per-head K/V (matmul-heavy, MXU-friendly)
+        k_nope = jnp.einsum("bsl,lhe->bshe", c_new,
+                            params["wk_b"].astype(x.dtype))
+        vv = jnp.einsum("bsl,lhe->bshe", c_new,
+                        params["wv_b"].astype(x.dtype))
+        kk = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_new[:, :, None, :],
+                                      (B, Sq, H, cfg.qk_rope_dim))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = blockwise_attention(qq, kk, vv, q_pos, q_pos, causal=cfg.causal,
+                                  window=window, scale=scale)
+        new_cache = None
+    else:
+        # Absorbed decode: fold wk_b into q, attend against the latent cache.
+        c_c, kr_c = cache
+        S = c_c.shape[1]
+        idx = q_pos.astype(jnp.int32)
+        b = jnp.arange(B, dtype=jnp.int32)[:, None]
+        c_c = c_c.at[b, idx].set(c_new.astype(c_c.dtype))
+        kr_c = kr_c.at[b, idx].set(kr_new.astype(kr_c.dtype))
+        new_cache = (c_c, kr_c)
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        limit = cache_len if cache_len is not None else q_pos[:, -1:] + 1
+        kv_pos = jnp.where(pos <= limit - 1, pos, -1)
+        valid = (kv_pos >= 0)[:, None, None, :]              # [B,1,1,S]
+        # scores = q_nope·(wk_b c) + q_rope·k_rope  — absorb wk_b into q:
+        q_abs = jnp.einsum("bshe,lhe->bshl", q_nope,
+                           params["wk_b"].astype(x.dtype))   # [B,Sq,H,kv_lora]
+        s = (jnp.einsum("bshl,btl->bhst", q_abs, c_c,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshe,bte->bhst", q_rope, kr_c,
+                          preferred_element_type=jnp.float32)) * scale
+        if cfg.causal:
+            causal_m = kv_pos[:, None, None, :] <= idx[:, None, :, None]
+            valid = valid & causal_m
+        s = jnp.where(valid, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        # out_h = wv_b^T (sum_t p_t c_t): absorb on the value side too
+        ctx = jnp.einsum("bhst,btl->bshl", p.astype(x.dtype), c_c)
+        out = jnp.einsum("bshl,lhe->bshe", ctx,
+                         params["wv_b"].astype(x.dtype))
+    o = jnp.einsum("bshe,hed->bsd", out, params["wo"].astype(x.dtype))
+    return o, new_cache

@@ -1,0 +1,183 @@
+"""Mamba-2 SSD (state-space duality) — chunked train/prefill + O(1) decode.
+
+The chunked dual form turns the recurrence into MXU-friendly matmuls:
+within-chunk terms are a masked attention-like product, across-chunk state is
+a short ``lax.scan``.  ``ssd_ref`` is the sequential oracle used by tests and
+by the Pallas kernel's allclose sweep.  Decode keeps (conv_state, ssm_state)
+per layer — O(1) in context length, which is what qualifies mamba2/hymba for
+the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PSpec, rmsnorm
+
+
+def ssm_specs(cfg):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = di + 2 * N
+    return {
+        "in_proj": PSpec((d, 2 * di + 2 * N + H), ("fsdp", None)),
+        "conv_w": PSpec((cfg.conv_kernel, conv_dim), (None, None),
+                        scale=0.5),
+        "conv_b": PSpec((conv_dim,), (None,), "zeros"),
+        "A_log": PSpec((H,), (None,), "zeros"),
+        "D": PSpec((H,), (None,), "ones"),
+        "dt_bias": PSpec((H,), (None,), "zeros"),
+        "norm_w": PSpec((di,), (None,), "zeros"),
+        "out_proj": PSpec((di, d), (None, "fsdp")),
+    }
+
+
+def _split(cfg, zxbcdt):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _conv(cfg, xBC, conv_w, conv_b):
+    """Depthwise causal conv over sequence. xBC: [B, S, conv_dim]."""
+    K = cfg.conv_kernel
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + xBC.shape[1], :] *
+              conv_w[k].astype(xBC.dtype) for k in range(K))
+    return jax.nn.silu(out + conv_b.astype(xBC.dtype))
+
+
+def ssd_chunked(xs, dt, A, B_, C_, chunk: int):
+    """Chunked SSD. xs:[B,S,H,P] dt:[B,S,H] A:[H] B_,C_:[B,S,N].
+    Returns y:[B,S,H,P] and final state [B,H,P,N]."""
+    B, S, H, Pd = xs.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, "sequence must be divisible by ssm_chunk"
+    r = lambda t: t.reshape((B, nc, chunk) + t.shape[2:])
+    xs_, dt_, Bc, Cc = r(xs), r(dt), r(B_), r(C_)
+
+    a = (dt_.astype(jnp.float32) * A.astype(jnp.float32))   # [B,nc,l,H]
+    cum = jnp.cumsum(a, axis=2)                              # within-chunk
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # [B,nc,i,j,H]
+    li = jnp.arange(chunk)
+    causal = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: future entries have positive seg that overflows, and
+    # where(mask, exp(seg), 0) then yields inf*0 = NaN in the backward pass
+    L = jnp.exp(jnp.where(causal, seg, -1e30))
+
+    # intra-chunk: y[i] = sum_j (C_i·B_j) L[i,j] dt_j x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    scores = cb[:, :, :, :, None] * L * dt_[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xs_.astype(jnp.float32))
+
+    # per-chunk state contribution: S_c = sum_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)             # [B,nc,l,H]
+    contrib = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                         decay_out * dt_, Bc.astype(jnp.float32),
+                         xs_.astype(jnp.float32))
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))                # [B,nc,H]
+
+    def scan_fn(h, inp):
+        contrib_c, dec_c = inp
+        h2 = h * dec_c[:, :, None, None] + contrib_c
+        return h2, h
+
+    h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+    hT, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (contrib.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # [B,nc,H,P,N]
+
+    # inter-chunk: y[i] += C_i · (h_prev * exp(cum_i))
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc.astype(jnp.float32),
+                         h_prevs) * jnp.exp(cum)[:, :, :, :, None]
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y.astype(xs.dtype), hT
+
+
+def ssd_ref(xs, dt, A, B_, C_):
+    """Sequential oracle: h_t = h_{t-1} e^{A dt_t} + dt_t B_t x_t^T."""
+    B, S, H, Pd = xs.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dec = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))
+        h = h * dec[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt_t.astype(jnp.float32),
+            b_t.astype(jnp.float32), x_t.astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", c_t.astype(jnp.float32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step, h0, (xs.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                   B_.transpose(1, 0, 2), C_.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(xs.dtype), hT
+
+
+def ssm_block(params, cfg, x, *, cache=None):
+    """Full Mamba-2 block.  x: [B, S, d].
+
+    Train/prefill (cache=None): chunked SSD over the sequence; returns
+    (out, None) — or (out, (conv_state, ssm_state)) if ``cache == "init"``
+    to produce a decode cache from prefill.
+    Decode: cache = (conv_state [B,K-1,conv_dim], ssm_state [B,H,P,N]),
+    S must be 1; returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    K = cfg.conv_kernel
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt = _split(cfg, zxbcdt)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    decode = cache is not None and cache != "init"
+    if not decode:
+        xBC = _conv(cfg, xBC, params["conv_w"], params["conv_b"])
+        xs = xBC[..., :di].reshape(B, S, H, Pd)
+        B_, C_ = xBC[..., di:di + N], xBC[..., di + N:]
+        if cfg.attn_impl in ("pallas", "pallas_interpret") and S >= cfg.ssm_chunk:
+            from repro.kernels.ssd import ops as ssd_ops
+            y, hT = ssd_ops.ssd(xs, dt, A, B_, C_, cfg.ssm_chunk,
+                                interpret=cfg.attn_impl == "pallas_interpret")
+        elif S >= cfg.ssm_chunk and S % cfg.ssm_chunk == 0:
+            y, hT = ssd_chunked(xs, dt, A, B_, C_, cfg.ssm_chunk)
+        else:
+            y, hT = ssd_ref(xs, dt, A, B_, C_)
+        new_cache = None
+        if cache == "init":
+            raw = x @ params["in_proj"].astype(x.dtype)
+            _, xBC_raw, _ = _split(cfg, raw)
+            pad = jnp.pad(xBC_raw, ((0, 0), (K - 1, 0), (0, 0)))
+            conv_state = pad[:, -(K - 1):, :]
+            new_cache = (conv_state, hT)
+    else:
+        conv_state, h = cache
+        assert S == 1
+        # depthwise conv against the rolling window
+        win = jnp.concatenate([conv_state, xBC], axis=1)      # [B,K,conv]
+        conv_out = jnp.einsum("bkc,kc->bc", win,
+                              params["conv_w"].astype(x.dtype)) \
+            + params["conv_b"].astype(x.dtype)
+        xBC1 = jax.nn.silu(conv_out)[:, None, :]
+        xs = xBC1[..., :di].reshape(B, 1, H, Pd)
+        B_, C_ = xBC1[..., di:di + N], xBC1[..., di + N:]
+        dec = jnp.exp(dt[:, 0] * A)                           # [B,H]
+        h = h * dec[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, 0], B_[:, 0].astype(jnp.float32),
+            xs[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32),
+                       h)[:, None].astype(x.dtype)
+        new_cache = (win[:, 1:, :], h)
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * \
+        xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
+    return y @ params["out_proj"].astype(x.dtype), new_cache

@@ -1,0 +1,344 @@
+"""Family assembly: dense / MoE / SSM / hybrid / audio / VLM models.
+
+Layers are scanned with stacked parameters (one compiled block regardless of
+depth — essential for dry-run compile times at 95 layers) with per-layer
+scalars (attention window) fed as scan inputs; heterogeneous-cache decode
+(gemma2's alternating local/global, hymba's 3 global layers) unrolls the
+layer loop so each layer binds its cache group statically, with ring buffers
+for sliding-window layers.
+
+Modes: ``train`` (loss-ready logits), ``prefill`` (build decode cache),
+``decode`` (one token against the cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (PSpec, cross_entropy, embed, embed_specs, mlp,
+                     mlp_specs, norm, norm_spec, stack_layers, unembed)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+def _block_specs(cfg, dense_ff: int | None = None):
+    s = {"ln1": norm_spec(cfg)}
+    if cfg.has_attn:
+        s["attn"] = (mla_mod.mla_specs(cfg) if cfg.use_mla
+                     else attn_mod.attn_specs(cfg))
+    if cfg.has_ssm:
+        s["ssm"] = ssm_mod.ssm_specs(cfg)
+    ff = dense_ff if dense_ff is not None else cfg.d_ff
+    if cfg.n_experts and dense_ff is None:
+        s["ln2"] = norm_spec(cfg)
+        s["moe"] = moe_mod.moe_specs(cfg)
+    elif ff:
+        s["ln2"] = norm_spec(cfg)
+        s["mlp"] = mlp_specs(cfg.d_model, ff, cfg.act)
+    return s
+
+
+def model_specs(cfg):
+    n_scanned = cfg.n_layers - (1 if cfg.first_dense_d_ff else 0)
+    s = {
+        "embed": embed_specs(cfg),
+        "layers": stack_layers(lambda: _block_specs(cfg), n_scanned),
+        "final_norm": norm_spec(cfg),
+    }
+    if cfg.first_dense_d_ff:
+        s["layer0"] = _block_specs(cfg, dense_ff=cfg.first_dense_d_ff)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# one layer
+# ---------------------------------------------------------------------------
+def _layer(cfg, p, x, q_pos, window, cache, cache_len, mode,
+           dense_ff: int | None = None):
+    """Returns (x, new_cache_slice, aux)."""
+    h = norm(cfg, x, p["ln1"])
+    new_cache = {}
+    parts = []
+    if cfg.has_attn:
+        if cfg.use_mla:
+            out, nc = mla_mod.mla_block(
+                p["attn"], cfg, h, q_pos,
+                cache=None if cache is None else (cache["ckv"], cache["kr"]),
+                cache_len=cache_len, window=0)
+            if nc is not None:
+                new_cache["ckv"], new_cache["kr"] = nc
+            elif mode == "prefill":
+                c, kr = mla_mod._project_latent(p["attn"], cfg, h, q_pos)
+                new_cache["ckv"], new_cache["kr"] = c, kr
+        else:
+            out, nc = attn_mod.attention_block(
+                p["attn"], cfg, h, q_pos, window=window,
+                cache=None if cache is None else (cache["k"], cache["v"]),
+                cache_len=cache_len)
+            if nc is not None:
+                new_cache["k"], new_cache["v"] = nc
+            elif mode == "prefill":
+                # stash this layer's K/V (recomputed: cheap vs attention)
+                k = jnp.einsum("bsd,dke->bske", h,
+                               p["attn"]["wk"].astype(h.dtype))
+                v = jnp.einsum("bsd,dke->bske", h,
+                               p["attn"]["wv"].astype(h.dtype))
+                k = attn_mod.rope(k, q_pos, cfg.rope_theta)
+                new_cache["k"], new_cache["v"] = k, v
+        parts.append(out)
+    if cfg.has_ssm:
+        sc = None
+        if cache is not None:
+            sc = (cache["conv"], cache["ssm"])
+        elif mode == "prefill":
+            sc = "init"
+        out2, nc2 = ssm_mod.ssm_block(p["ssm"], cfg, h, cache=sc)
+        if nc2 is not None:
+            new_cache["conv"], new_cache["ssm"] = nc2
+        parts.append(out2)
+    mix = parts[0] if len(parts) == 1 else \
+        0.5 * (parts[0] + parts[1])          # hymba: parallel heads, averaged
+    x = x + mix
+    aux = jnp.float32(0.0)
+    if "moe" in p and dense_ff is None:
+        h2 = norm(cfg, x, p["ln2"])
+        y, aux = moe_mod.moe_block(p["moe"], cfg, h2)
+        x = x + y
+    elif "mlp" in p:
+        h2 = norm(cfg, x, p["ln2"])
+        x = x + mlp(p["mlp"], h2, cfg.act)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding of heterogeneous inputs
+# ---------------------------------------------------------------------------
+def embed_inputs(params, cfg, batch):
+    """-> (x [B,S,d], positions [B,S], label_mask [B,S] or None)."""
+    if cfg.frontend == "audio":
+        feats = batch["features"]
+        if "mask" in batch:  # HuBERT-style masked prediction
+            feats = feats * (1.0 - batch["mask"][..., None])
+        x = feats.astype(jnp.bfloat16) @ \
+            params["embed"]["frontend_proj"].astype(jnp.bfloat16)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return x, pos, batch.get("mask")
+    if cfg.frontend == "vision":
+        tok = embed(params["embed"], cfg, batch["tokens"])
+        vis = batch["vision"].astype(tok.dtype)
+        x = jnp.concatenate([vis, tok], axis=1)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mask = jnp.concatenate(
+            [jnp.zeros(vis.shape[:2], jnp.float32),
+             jnp.ones(tok.shape[:2], jnp.float32)], axis=1)
+        return x, pos, mask
+    x = embed(params["embed"], cfg, batch["tokens"])
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, pos, None
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill) via layer scan
+# ---------------------------------------------------------------------------
+def forward(params, cfg, batch, mode: str = "train", cache=None,
+            positions=None, cache_len=None):
+    """Scanned forward pass.
+
+    train:   batch -> logits [B,S,Vp], aux
+    prefill: batch -> logits, cache (stacked [L,...]), aux
+    decode:  batch['tokens'] [B,1] + cache + positions [B,1] -> logits, cache
+    """
+    assert mode in ("train", "prefill", "decode")
+    if mode == "decode":
+        x = embed(params["embed"], cfg, batch["tokens"])
+        q_pos = positions
+    else:
+        x, q_pos, _ = embed_inputs(params, cfg, batch)
+
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    n_scanned = cfg.n_layers - (1 if cfg.first_dense_d_ff else 0)
+    if cfg.first_dense_d_ff:
+        windows0, windows = windows[0], windows[1:]
+        c0 = None if cache is None else jax.tree.map(lambda a: a[0], cache)
+        x, nc0, _ = _layer(cfg, params["layer0"], x, q_pos, windows0, c0,
+                           cache_len, mode, dense_ff=cfg.first_dense_d_ff)
+    else:
+        nc0 = None
+
+    layer = partial(_layer, cfg)
+    if cfg.remat != "none" and mode == "train":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        layer = jax.checkpoint(layer, policy=policy, static_argnums=(6,))
+
+    def scan_body(x, inp):
+        p, w, c = inp
+        x = constrain(x, "fsdp", None, None)
+        x, nc, aux = layer(p, x, q_pos, w, c, cache_len, mode)
+        return x, (nc, aux)
+
+    cache_scanned = None
+    if cache is not None:
+        cache_scanned = cache if not cfg.first_dense_d_ff else \
+            jax.tree.map(lambda a: a[1:], cache)
+    if cache_scanned is None:
+        x, (ncs, auxs) = jax.lax.scan(
+            lambda xc, inp: scan_body(xc, (inp[0], inp[1], None)),
+            x, (params["layers"], windows))
+    else:
+        x, (ncs, auxs) = jax.lax.scan(
+            scan_body, x, (params["layers"], windows, cache_scanned))
+
+    x = norm(cfg, x, params["final_norm"])
+    logits = unembed(params["embed"], cfg, x)
+    logits = constrain(logits, "fsdp", None, "tensor")
+    aux = jnp.sum(auxs) / max(n_scanned, 1)
+
+    new_cache = None
+    if mode in ("prefill", "decode") and ncs:
+        new_cache = ncs
+        if nc0 is not None:
+            new_cache = jax.tree.map(
+                lambda a0, rest: jnp.concatenate([a0[None], rest], axis=0),
+                nc0, ncs)
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def needs_unrolled_decode(cfg, S_max: int) -> bool:
+    """Heterogeneous cache shapes (ring vs full) => unroll the layer loop."""
+    ws = cfg.layer_windows()
+    kinds = {("ring" if 0 < w < S_max else "full") for w in ws
+             if cfg.has_attn}
+    return len(kinds) > 1
+
+
+def init_cache(cfg, B: int, S_max: int, dtype=jnp.bfloat16):
+    """Decode cache for the *scanned* (uniform) path, stacked [L, ...]."""
+    L = cfg.n_layers
+    c = {}
+    if cfg.has_attn:
+        if cfg.use_mla:
+            c["ckv"] = jnp.zeros((L, B, S_max, cfg.kv_lora), dtype)
+            c["kr"] = jnp.zeros((L, B, S_max, cfg.qk_rope_dim), dtype)
+        else:
+            kvh, hd = cfg.n_kv_heads, cfg.head_dim
+            c["k"] = jnp.zeros((L, B, S_max, kvh, hd), dtype)
+            c["v"] = jnp.zeros((L, B, S_max, kvh, hd), dtype)
+    if cfg.has_ssm:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        c["conv"] = jnp.zeros((L, B, cfg.conv_kernel - 1, conv_dim), dtype)
+        c["ssm"] = jnp.zeros((L, B, cfg.n_ssm_heads, cfg.ssm_headdim,
+                              cfg.ssm_state), jnp.float32)
+    return c
+
+
+def init_cache_unrolled(cfg, B: int, S_max: int, dtype=jnp.bfloat16):
+    """Heterogeneous cache: ring buffers for SWA layers, full for global."""
+    ws = cfg.layer_windows()
+    c = {"layers": []}
+    for w in ws:
+        lc = {}
+        if cfg.has_attn:
+            kvh, hd = cfg.n_kv_heads, cfg.head_dim
+            S = min(w, S_max) if 0 < w < S_max else S_max
+            lc["k"] = jnp.zeros((B, S, kvh, hd), dtype)
+            lc["v"] = jnp.zeros((B, S, kvh, hd), dtype)
+            lc["pos"] = jnp.full((B, S), -1, jnp.int32)  # absolute positions
+        if cfg.has_ssm:
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            lc["conv"] = jnp.zeros((B, cfg.conv_kernel - 1, conv_dim), dtype)
+            lc["ssm"] = jnp.zeros((B, cfg.n_ssm_heads, cfg.ssm_headdim,
+                                   cfg.ssm_state), jnp.float32)
+        c["layers"].append(lc)
+    return c
+
+
+def decode_unrolled(params, cfg, tokens, cache, positions):
+    """One decode step with per-layer static cache groups (ring or full)."""
+    x = embed(params["embed"], cfg, tokens)
+    B = x.shape[0]
+    ws = cfg.layer_windows()
+    new_layers = []
+    n0 = 1 if cfg.first_dense_d_ff else 0
+    for li in range(cfg.n_layers):
+        if li == 0 and n0:
+            p = params["layer0"]
+        else:
+            p = jax.tree.map(lambda a: a[li - n0], params["layers"])
+        lc = cache["layers"][li]
+        nlc = dict(lc)
+        h = norm(cfg, x, p["ln1"])
+        parts = []
+        if cfg.has_attn:
+            w = ws[li]
+            q = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wq"].astype(h.dtype))
+            k = jnp.einsum("bsd,dke->bske", h, p["attn"]["wk"].astype(h.dtype))
+            v = jnp.einsum("bsd,dke->bske", h, p["attn"]["wv"].astype(h.dtype))
+            q = attn_mod.rope(q, positions, cfg.rope_theta)
+            k = attn_mod.rope(k, positions, cfg.rope_theta)
+            S = lc["k"].shape[1]
+            slot = (positions % S).astype(jnp.int32)          # ring write
+            b = jnp.arange(B, dtype=jnp.int32)[:, None]
+            kk = lc["k"].at[b, slot].set(k.astype(lc["k"].dtype))
+            vv = lc["v"].at[b, slot].set(v.astype(lc["v"].dtype))
+            pp = lc["pos"].at[b, slot].set(positions.astype(jnp.int32))
+            nlc.update(k=kk, v=vv, pos=pp)
+            out = attn_mod.blockwise_attention(
+                q, kk, vv, positions, pp, causal=cfg.causal, window=w,
+                cap=cfg.attn_softcap)
+            out = jnp.einsum("bshe,hed->bsd", out,
+                             p["attn"]["wo"].astype(h.dtype))
+            parts.append(out)
+        if cfg.has_ssm:
+            out2, (cs, hs) = ssm_mod.ssm_block(
+                p["ssm"], cfg, h, cache=(lc["conv"], lc["ssm"]))
+            nlc.update(conv=cs, ssm=hs)
+            parts.append(out2)
+        x = x + (parts[0] if len(parts) == 1 else 0.5 * (parts[0] + parts[1]))
+        if "moe" in p:
+            y, _ = moe_mod.moe_block(p["moe"], cfg, norm(cfg, x, p["ln2"]))
+            x = x + y
+        elif "mlp" in p:
+            x = x + mlp(p["mlp"], norm(cfg, x, p["ln2"]), cfg.act)
+        new_layers.append(nlc)
+    x = norm(cfg, x, params["final_norm"])
+    logits = unembed(params["embed"], cfg, x)
+    return logits, {"layers": new_layers}
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def train_loss(params, cfg, batch, aux_coef: float = 0.01,
+               z_loss: float = 1e-4):
+    logits, _, aux = forward(params, cfg, batch, mode="train")
+    if cfg.frontend == "audio":
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        loss = cross_entropy(logits, labels, mask=mask, z_loss=z_loss)
+    elif cfg.frontend == "vision":
+        nv = batch["vision"].shape[1]
+        lm_logits = logits[:, nv:-1]
+        labels = batch["tokens"][:, 1:]
+        loss = cross_entropy(lm_logits, labels, z_loss=z_loss)
+    else:
+        loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
+                             z_loss=z_loss)
+    return loss + aux_coef * aux

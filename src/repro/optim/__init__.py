@@ -1,0 +1,3 @@
+from .adamw import adamw_init, adamw_update, clip_by_global_norm  # noqa
+from .compress import (dequant_int8, int8_allreduce_grads,  # noqa
+                       quant_int8)

@@ -1,0 +1,86 @@
+"""AdamW with optional 8-bit (error-feedback-free, blockwise-scaled) moment
+states — the optimizer-memory half of the distributed-optimization story:
+m/v in int8 cut optimizer bytes 8x, which is what lets grok-1-314b train on
+a single 256-chip pod (see EXPERIMENTS.md §Dry-run memory notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _q8(x):
+    """Blockwise int8 quantization along the flattened last axis."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def adamw_init(params, *, moments_dtype: str = "float32"):
+    def zero(p):
+        if moments_dtype == "int8":
+            q, s = _q8(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return {
+        "m": jax.tree.map(zero, params),
+        "v": jax.tree.map(zero, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, moments_dtype: str = "float32"):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    int8 = moments_dtype == "int8"
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        mf = _dq8(m["q"], m["s"], g.shape) if int8 else m
+        vf = _dq8(v["q"], v["s"], g.shape) if int8 else v
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * g * g
+        mh = mf / (1 - b1 ** cf)
+        vh = vf / (1 - b2 ** cf)
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        if int8:
+            qm, sm = _q8(mf)
+            qv, sv = _q8(vf)
+            return new_p, {"q": qm, "s": sm}, {"q": qv, "s": sv}
+        return new_p, mf, vf
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    leaves, treedef = jax.tree.flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3)
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor
+                                   ).astype(g.dtype), grads), norm

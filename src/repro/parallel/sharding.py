@@ -1,0 +1,113 @@
+"""Logical-axis → mesh-axis rules (DP/FSDP/TP/EP/SP).
+
+Parameters carry *logical* axes ('fsdp', 'tensor', 'tensor_q', 'tensor_kv',
+'tensor_vocab', 'expert', 'expert_ff'); this module resolves them for a
+concrete (config, mesh) pair with divisibility-aware fallbacks:
+
+* ``fsdp``      -> ('pod','data') — ZeRO-3 parameter/optimizer sharding
+* ``tensor``    -> 'model' (Megatron TP on d_ff / vocab-padded dims)
+* ``tensor_q``  -> 'model' if n_heads % tp == 0 else None (phi3: 40 heads)
+* ``tensor_kv`` -> 'model' if n_kv_heads % tp == 0 else None (GQA kv<tp:
+                   replicate KV projections; decode caches shard head_dim)
+* ``expert``    -> 'model' when E % tp == 0 (EP: deepseek-v2 160/16),
+                   else None with ``expert_ff`` -> 'model' (grok-1: 8 experts
+                   tensor-sharded on their 32768-wide FFN)
+* SSM params    -> fsdp-only (head counts of the assigned SSM/hybrid archs
+                   don't divide tp; documented in DESIGN.md)
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# --- activation-sharding context (set while tracing/lowering on a mesh) ----
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules):
+    """Enable ``constrain`` during tracing (dry-run lowering / training)."""
+    _ACTIVE.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axes; no-op outside the context.
+    Dims that don't divide evenly are silently left unsharded (e.g. batch=1
+    for long_500k)."""
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    entries = []
+    for dim, a in enumerate(axes):
+        phys = rules.get(a) if a is not None else None
+        if phys is None:
+            entries.append(None)
+            continue
+        names = (phys,) if isinstance(phys, str) else tuple(phys)
+        n = 1
+        for nm in names:
+            n *= mesh.shape[nm]
+        entries.append(phys if x.shape[dim] % n == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def data_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_rules(cfg, tp: int, dp_axes: tuple) -> dict:
+    ep_ok = cfg.n_experts > 0 and cfg.n_experts % tp == 0
+    return {
+        "fsdp": dp_axes,
+        "tensor": "model",
+        "tensor_q": "model" if (cfg.n_heads and cfg.n_heads % tp == 0)
+        else None,
+        "tensor_kv": "model" if (cfg.n_kv_heads and cfg.n_kv_heads % tp == 0)
+        else None,
+        "expert": "model" if ep_ok else None,
+        "expert_ff": None if ep_ok else (
+            "model" if (cfg.expert_d_ff and cfg.expert_d_ff % tp == 0)
+            else None),
+        # tensor-mode MoE (grok: 8 experts < tp): sharding the capacity rows
+        # over DP removes 9x replicated expert flops but XLA then routes the
+        # buffers with expensive gathers — net loss on the step bound, so
+        # opt-in (§Perf cell D; a shard_map manual-a2a dispatch is the
+        # documented future fix).
+        "moe_cap": dp_axes if (not ep_ok and getattr(
+            cfg, "moe_cap_shard", False)) else None,
+    }
+
+
+def make_rules_for_mesh(cfg, mesh) -> dict:
+    return make_rules(cfg, mesh.shape["model"], data_axes(mesh))
+
+
+def batch_pspec(mesh, global_batch: int) -> P:
+    """Batch sharding: over (pod, data) when divisible, else data, else
+    replicated (long_500k batch=1)."""
+    axes = data_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if global_batch % n == 0:
+        return P(axes)
+    if global_batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P(None)
+
+
+def seq_pspec(mesh, cfg, seq_len: int, batch_sharded: bool) -> P | None:
+    """Sequence-parallel spec for long sequences when batch can't shard."""
+    if batch_sharded:
+        return None
+    if seq_len % mesh.shape["data"] == 0:
+        return P(None, "data")
+    return None

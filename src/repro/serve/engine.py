@@ -1,0 +1,136 @@
+"""Continuous-batching serving engine.
+
+Fixed decode slots share one stacked KV cache; requests are admitted into
+free slots (prefill writes the slot's cache region), and one fused decode
+step advances every active slot.  The loop follows Smart-Ticking semantics
+(paper §3.2, applied to serving): when no slot is active it *sleeps* —
+no decode steps are issued — and request arrival wakes it; idle slots ride
+along masked (the vectorized engine's lane-masking analogy, DESIGN.md §2).
+
+Every request is a traced task (submit -> prefill -> decode* -> finish), so
+AkitaRTM-style monitoring and Daisen export work on the serving loop too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tracing import TracingDomain
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    task: object = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, max_batch: int = 4, max_len: int = 256,
+                 eos_id: int | None = None,
+                 domain: TracingDomain | None = None):
+        assert not tfm.needs_unrolled_decode(cfg, max_len), \
+            "slot engine uses the scanned decode path"
+        self.cfg, self.params = cfg, params
+        self.B, self.S = max_batch, max_len
+        self.eos = eos_id
+        self.dom = domain or TracingDomain("serve")
+        self.cache = tfm.init_cache(cfg, max_batch, max_len)
+        self.pos = np.zeros(max_batch, np.int32)      # next write position
+        self.active: list[Request | None] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.last_tok = np.zeros(max_batch, np.int32)
+        self._rid = itertools.count()
+        self._decode = jax.jit(self._decode_fn)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt_tokens, max_new: int = 32) -> int:
+        r = Request(next(self._rid), np.asarray(prompt_tokens, np.int32),
+                    max_new)
+        r.task = self.dom.start_task("request", "serve", "engine",
+                                     rid=r.rid, prompt_len=len(r.prompt))
+        self.queue.append(r)
+        return r.rid
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            r = self.queue.pop(0)
+            r.slot = slot
+            with self.dom.task("prefill", f"len{len(r.prompt)}",
+                               f"slot{slot}"):
+                toks = jnp.asarray(r.prompt)[None, :]
+                logits, pcache, _ = tfm.forward(self.params, self.cfg,
+                                                {"tokens": toks},
+                                                mode="prefill")
+                S0 = len(r.prompt)
+                for k, v in pcache.items():
+                    dst = self.cache[k]
+                    if k in ("k", "v", "ckv", "kr"):
+                        self.cache[k] = dst.at[:, slot, :S0].set(
+                            v[:, 0].astype(dst.dtype))
+                    else:
+                        self.cache[k] = dst.at[:, slot].set(
+                            v[:, 0].astype(dst.dtype))
+                nxt = int(jnp.argmax(logits[0, -1]))
+            self.active[slot] = r
+            self.pos[slot] = S0
+            self.last_tok[slot] = nxt
+            r.out.append(nxt)
+
+    # ------------------------------------------------------------------
+    def _decode_fn(self, params, cache, tokens, positions):
+        logits, cache, _ = tfm.forward(
+            params, self.cfg, {"tokens": tokens}, mode="decode", cache=cache,
+            positions=positions, cache_len=positions + 1)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    def step(self) -> list[Request]:
+        """Admit + one fused decode step.  Smart-Ticking: returns without
+        touching the device when every slot is idle (progress=False)."""
+        self._admit()
+        if all(r is None for r in self.active):
+            return []
+        with self.dom.task("decode", "step", "engine",
+                           active=sum(r is not None for r in self.active)):
+            toks = jnp.asarray(self.last_tok)[:, None]
+            pos = jnp.asarray(self.pos)[:, None]
+            nxt, self.cache = self._decode(self.params, self.cache, toks,
+                                           pos)
+            nxt = np.asarray(nxt)
+        finished = []
+        for slot, r in enumerate(self.active):
+            if r is None:
+                continue
+            self.pos[slot] += 1
+            tok = int(nxt[slot])
+            r.out.append(tok)
+            self.last_tok[slot] = tok
+            hit_eos = self.eos is not None and tok == self.eos
+            if len(r.out) >= r.max_new or hit_eos or \
+                    self.pos[slot] >= self.S - 1:
+                r.done = True
+                self.dom.tag_task("eos" if hit_eos else "length",
+                                  t=r.task)
+                self.dom.end_task(r.task)
+                finished.append(r)
+                self.active[slot] = None
+        return finished
+
+    def run_until_idle(self, max_steps: int = 10_000):
+        done = []
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            done += self.step()
+        return done

@@ -1,0 +1,151 @@
+"""Serving steps: prefill (context -> cache) and decode (one token against
+the cache), with cache shardings for the production meshes.
+
+Cache sharding rules (see DESIGN.md §5):
+* batch over (pod, data) when divisible;
+* GQA KV heads over 'model' when divisible, else head_dim over 'model'
+  (deepseek-67b/grok/internvl: kv=8 < tp=16 -> shard the 128-wide head_dim);
+* MLA latent: kv_lora (512) over 'model';
+* long_500k (batch=1): sequence dimension over 'data' (sequence parallelism
+  for the KV cache; attention contracts over the sharded S with a psum);
+* SSM states: batch-sharded only (O(1) size).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.layers import abstract_params, make_pspecs
+from repro.parallel.sharding import batch_pspec, make_rules_for_mesh
+from repro.train.step import abstract_batch
+
+
+def cache_pspecs(cfg, mesh, B: int, S: int, unrolled: bool):
+    tp = mesh.shape["model"]
+    bp = batch_pspec(mesh, B)              # P over batch dim (maybe empty)
+    b0 = bp[0] if len(bp) else None
+    seq = "data" if (b0 is None and S % mesh.shape["data"] == 0) else None
+    kv_ax = "model" if (cfg.n_kv_heads and cfg.n_kv_heads % tp == 0) else None
+    hd_ax = "model" if (kv_ax is None and cfg.head_dim
+                        and cfg.head_dim % tp == 0) else None
+
+    def attn_specs(with_layer):
+        l = (None,) if with_layer else ()
+        return {
+            "k": P(*l, b0, seq, kv_ax, hd_ax),
+            "v": P(*l, b0, seq, kv_ax, hd_ax),
+        }
+
+    def mla_specs(with_layer):
+        l = (None,) if with_layer else ()
+        lat = "model" if cfg.kv_lora % tp == 0 else None
+        return {"ckv": P(*l, b0, seq, lat), "kr": P(*l, b0, seq, None)}
+
+    def ssm_specs(with_layer):
+        l = (None,) if with_layer else ()
+        return {"conv": P(*l, b0, None, None),
+                "ssm": P(*l, b0, None, None, None)}
+
+    if unrolled:
+        per_layer = []
+        for w in cfg.layer_windows():
+            lc = {}
+            if cfg.has_attn:
+                s_layer = "data" if (b0 is None and
+                                     min(w, S) % mesh.shape["data"] == 0
+                                     and not (0 < w < S)) else None
+                lc.update(attn_specs(False))
+                lc["pos"] = P(b0, None)
+            if cfg.has_ssm:
+                lc.update(ssm_specs(False))
+            per_layer.append(lc)
+        return {"layers": per_layer}
+    c = {}
+    if cfg.has_attn:
+        c.update(mla_specs(True) if cfg.use_mla else attn_specs(True))
+    if cfg.has_ssm:
+        c.update(ssm_specs(True))
+    return c
+
+
+def make_decode_step(cfg, unrolled: bool):
+    def decode_step(params, cache, tokens, positions):
+        if unrolled:
+            logits, cache = tfm.decode_unrolled(params, cfg, tokens, cache,
+                                                positions)
+        else:
+            logits, cache, _ = tfm.forward(
+                params, cfg, {"tokens": tokens}, mode="decode", cache=cache,
+                positions=positions, cache_len=positions + 1)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return decode_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        logits, cache, _ = tfm.forward(params, cfg, batch, mode="prefill")
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return prefill_step
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def assemble_decode(cfg, mesh, shape):
+    """Jitted decode step + abstract (params, cache, tokens, positions)."""
+    B, S = shape.global_batch, shape.seq_len
+    unrolled = tfm.needs_unrolled_decode(cfg, S)
+    rules = make_rules_for_mesh(cfg, mesh)
+    specs = tfm.model_specs(cfg)
+    p_pspecs = make_pspecs(specs, rules)
+    params = abstract_params(specs)
+    cache_fn = tfm.init_cache_unrolled if unrolled else tfm.init_cache
+    cache = jax.eval_shape(partial(cache_fn, cfg, B, S))
+    c_pspecs = cache_pspecs(cfg, mesh, B, S, unrolled)
+    bp = batch_pspec(mesh, B)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tp_spec = P(bp[0] if len(bp) else None, None)
+
+    step = make_decode_step(cfg, unrolled)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_ns(mesh, p_pspecs), _ns(mesh, c_pspecs),
+                      NamedSharding(mesh, tp_spec),
+                      NamedSharding(mesh, tp_spec)),
+        out_shardings=(NamedSharding(mesh, P(bp[0] if len(bp) else None)),
+                       _ns(mesh, c_pspecs)),
+        donate_argnums=(1,))
+    return jitted, (params, cache, tok, pos)
+
+
+def assemble_prefill(cfg, mesh, shape):
+    rules = make_rules_for_mesh(cfg, mesh)
+    specs = tfm.model_specs(cfg)
+    p_pspecs = make_pspecs(specs, rules)
+    params = abstract_params(specs)
+    batch = abstract_batch(cfg, shape)
+    from repro.train.step import batch_pspecs as bspecs_fn
+    b_pspecs = bspecs_fn(cfg, mesh, shape)
+    B, S = shape.global_batch, shape.seq_len
+    bp = batch_pspec(mesh, B)
+    c_pspecs = cache_pspecs(cfg, mesh, B, S, unrolled=False)
+
+    step = make_prefill_step(cfg)
+    out_shardings = (NamedSharding(mesh, P(bp[0] if len(bp) else None)),
+                     _ns(mesh, c_pspecs))
+    jitted = jax.jit(step,
+                     in_shardings=(_ns(mesh, p_pspecs), _ns(mesh, b_pspecs)),
+                     out_shardings=out_shardings)
+    return jitted, (params, batch)

@@ -1,0 +1,1 @@
+"""Case-study simulators built on the Akita engine (paper §4 and §5)."""

@@ -1,0 +1,286 @@
+"""GPU-like multi-core memory-system simulator — the Smart-Ticking
+evaluation vehicle (paper §4 runs MGPUSim; we build the equivalent
+cores + private L1 + shared-DRAM-over-crossbar system on the engine).
+
+Workload patterns mirror the paper's benchmark behaviours:
+  * ``compute``  — long think times, cores mostly busy (FIR/AES-like);
+  * ``stream``   — back-to-back sequential misses, memory-bound (S2D-like);
+  * ``pointer``  — serialized dependent misses (MLP=1);
+  * ``idle_half``— half the cores have no work (ATAX's "limited
+    parallelism", where Smart Ticking shines);
+  * ``mixed``    — a blend.
+
+Opcodes: 1=READ_REQ, 2=READ_RESP, 3=WRITE_REQ (fire-and-forget).
+Payload: p0=address, p1=requester tag.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ComponentKind, SimBuilder, TickResult, msg_new,
+                        msg_reply, opcode, payload)
+from repro.core.pdes import ShardedSim, add_gateway
+
+READ_REQ, READ_RESP, WRITE_REQ = 1, 2, 3
+
+
+# ---------------------------------------------------------------------------
+def core_tick(state, ports, t):
+    """Issues reads with think-time compute phases; up to 1 outstanding."""
+    progress = jnp.asarray(False)
+    # accept response
+    msg, got, ports = ports.recv(0)
+    state = dict(state)
+    state["outstanding"] = state["outstanding"] - got.astype(jnp.int32)
+    progress = progress | got
+    computing = t + 1e-3 < state["next_issue"]
+    can_issue = ((state["remaining"] > 0) & (state["outstanding"] < 1)
+                 & ~computing)
+    # LCG address stream
+    addr = (state["addr"] * 1103515245 + 12345) & 0x7FFFFFFF
+    addr_use = jnp.where(state["seq"] > 0,
+                         state["addr"] + 64, addr)  # sequential vs random
+    ports, sent = ports.send(
+        0, msg_new(READ_REQ, p0=addr_use, p1=state["tag"]), when=can_issue)
+    si = sent.astype(jnp.int32)
+    state["addr"] = jnp.where(sent, addr_use, state["addr"])
+    state["remaining"] = state["remaining"] - si
+    state["outstanding"] = state["outstanding"] + si
+    state["next_issue"] = jnp.where(
+        sent, t + state["think"].astype(jnp.float32), state["next_issue"])
+    progress = progress | sent
+    # while computing, fast-forward to the next issue time (event-driven)
+    nxt = jnp.where(computing & (state["remaining"] > 0)
+                    & (state["outstanding"] < 1),
+                    state["next_issue"], -1.0)
+    return state, ports, TickResult.make(progress, next_time=nxt)
+
+
+def l1_tick(state, ports, t):
+    """Direct-mapped L1; 1 MSHR; port 0 = core side, port 1 = memory side."""
+    state = dict(state)
+    progress = jnp.asarray(False)
+    n_sets = state["tags"].shape[0]
+
+    # 1) fill response from memory
+    rmsg, rgot, ports = ports.recv(1, when=ports.can_send(0))
+    addr_r = payload(rmsg, 0)
+    set_r = (addr_r // 64) % n_sets
+    state["tags"] = jnp.where(
+        rgot, state["tags"].at[set_r].set(addr_r // 64), state["tags"])
+    # reply to the core (port 0's paired peer), NOT to the fill's sender
+    ports, _ = ports.send(0, msg_new(READ_RESP, p0=addr_r,
+                                     p1=payload(rmsg, 1)), when=rgot)
+    state["mshr_busy"] = jnp.where(rgot, 0, state["mshr_busy"])
+    progress = progress | rgot
+
+    # 2) new request from the core (only if we could respond / forward)
+    can_hit_path = ports.can_send(0)
+    can_miss_path = (state["mshr_busy"] == 0) & ports.can_send(1)
+    msg, got = ports.peek(0)
+    addr = payload(msg, 0)
+    set_i = (addr // 64) % n_sets
+    hit = state["tags"][set_i] == addr // 64
+    accept = got & jnp.where(hit, can_hit_path, can_miss_path)
+    _, _, ports = ports.recv(0, when=accept)
+    ports, _ = ports.send(0, msg_reply(msg, READ_RESP, p0=addr,
+                                       p1=payload(msg, 1)),
+                          when=accept & hit)
+    ports, fwd = ports.send(1, msg_new(READ_REQ, p0=addr, p1=payload(msg, 1)),
+                            when=accept & ~hit)
+    state["mshr_busy"] = jnp.where(fwd, 1, state["mshr_busy"])
+    state["hits"] = state["hits"] + (accept & hit).astype(jnp.int32)
+    state["misses"] = state["misses"] + fwd.astype(jnp.int32)
+    progress = progress | accept
+    return state, ports, TickResult.make(progress)
+
+
+def dram_tick(state, ports, t):
+    """One request per cycle; replies ride the connection latency."""
+    state = dict(state)
+    msg, got, ports = ports.recv(0, when=ports.can_send(0))
+    op = opcode(msg)
+    is_read = got & (op == READ_REQ)
+    ports, _ = ports.send(0, msg_reply(msg, READ_RESP, p0=payload(msg, 0),
+                                       p1=payload(msg, 1)), when=is_read)
+    state["served"] = state["served"] + got.astype(jnp.int32)
+    return state, ports, TickResult.make(got)
+
+
+# ---------------------------------------------------------------------------
+def _workload(pattern: str, n_cores: int, n_reqs: int, rng):
+    think = np.zeros(n_cores, np.int32)
+    seq = np.zeros(n_cores, np.int32)
+    remaining = np.full(n_cores, n_reqs, np.int32)
+    if pattern == "compute":
+        think[:] = 24
+    elif pattern == "stream":
+        seq[:] = 1
+        think[:] = 0
+    elif pattern == "pointer":
+        think[:] = 2
+    elif pattern == "idle_half":
+        remaining[n_cores // 2:] = 0
+        think[:] = 4
+    elif pattern == "mixed":
+        think[:] = rng.integers(0, 16, n_cores)
+        seq[:] = rng.integers(0, 2, n_cores)
+    else:
+        raise ValueError(pattern)
+    return remaining, think, seq
+
+
+def build_memsys(n_cores: int = 8, pattern: str = "mixed",
+                 n_reqs: int = 64, dram_latency: float = 30.0,
+                 naive: bool = False, seed: int = 0,
+                 sample_period: float = 0.0, private_dram: bool = False):
+    rng = np.random.default_rng(seed)
+    remaining, think, seq = _workload(pattern, n_cores, n_reqs, rng)
+    b = SimBuilder()
+    cores = b.add_kind(ComponentKind(
+        "core", core_tick, n_cores, 1,
+        {"remaining": jnp.asarray(remaining),
+         "outstanding": jnp.zeros(n_cores, jnp.int32),
+         "addr": jnp.asarray(rng.integers(0, 1 << 20, n_cores), jnp.int32),
+         "seq": jnp.asarray(seq),
+         "think": jnp.asarray(think),
+         "tag": jnp.arange(n_cores, dtype=jnp.int32),
+         "next_issue": jnp.zeros(n_cores, jnp.float32)}, cap=2))
+    n_sets = 64
+    l1 = b.add_kind(ComponentKind(
+        "l1", l1_tick, n_cores, 2,
+        {"tags": jnp.full((n_cores, n_sets), -1, jnp.int32),
+         "mshr_busy": jnp.zeros(n_cores, jnp.int32),
+         "hits": jnp.zeros(n_cores, jnp.int32),
+         "misses": jnp.zeros(n_cores, jnp.int32)}, cap=2))
+    n_dram = n_cores if private_dram else 1
+    dram = b.add_kind(ComponentKind(
+        "dram", dram_tick, n_dram, 1,
+        {"served": jnp.zeros(n_dram, jnp.int32)}, cap=4))
+    for i in range(n_cores):
+        b.connect([cores.port(i, 0), l1.port(i, 0)], latency=1.0)
+    if private_dram:
+        # independent tiles (no shared-resource contention): the lane-
+        # scaling measurement for transparent parallelism (Fig 10 analogue)
+        for i in range(n_cores):
+            b.connect([l1.port(i, 1), dram.port(i, 0)],
+                      latency=dram_latency)
+    else:
+        # shared crossbar: every L1's memory port + the DRAM port on ONE
+        # connection (Akita's multi-port round-robin crossbar)
+        b.connect([l1.port(i, 1) for i in range(n_cores)]
+                  + [dram.port(0, 0)], latency=dram_latency)
+    sim = b.build(naive=naive, sample_period=sample_period)
+    st = sim.init_state()
+    return sim, st
+
+
+def finish_stats(sim, st):
+    cs = st.comp_state
+    return {
+        "virtual_time": float(st.time),
+        "epochs": int(st.stats.epochs),
+        "ticks": int(st.stats.ticks),
+        "delivered": int(st.stats.delivered),
+        "reads_done": int(jnp.sum(cs["dram"]["served"])),
+        "hits": int(jnp.sum(cs["l1"]["hits"])),
+        "misses": int(jnp.sum(cs["l1"]["misses"])),
+        "remaining": int(jnp.sum(cs["core"]["remaining"])),
+        "outstanding": int(jnp.sum(cs["core"]["outstanding"])),
+    }
+
+
+# ---------------------------------------------------------------------------
+# multi-member crossbar needs explicit dst: patch core/l1 states with gids
+# ---------------------------------------------------------------------------
+def _patch_dsts(sim, st, n_cores):
+    dram_pid = sim.port_id("dram", 0, 0)
+    # l1 memory-side sends go to the DRAM port; l1 replies use msg src. The
+    # l1 tick uses msg_new for forwards (default peer = -1 on the crossbar),
+    # so rewrite: default dst for the l1 mem port = dram port id.
+    peer = np.asarray(sim.c["peer"]).copy()
+    for i in range(n_cores):
+        peer[sim.port_id("l1", i, 1)] = dram_pid
+    import jax.numpy as jnp2
+    sim.c["peer"] = jnp2.asarray(peer)
+    return sim, st
+
+
+def build(n_cores=8, pattern="mixed", n_reqs=64, naive=False, seed=0,
+          dram_latency=30.0, sample_period=0.0, private_dram=False):
+    sim, st = build_memsys(n_cores, pattern, n_reqs, dram_latency, naive,
+                           seed, sample_period, private_dram)
+    if private_dram:
+        return sim, st          # 1:1 links use default peers
+    return _patch_dsts(sim, st, n_cores)
+
+
+# ---------------------------------------------------------------------------
+# sharded-PDES variant for the multi-pod dry-run (engine-as-workload)
+# ---------------------------------------------------------------------------
+def remote_writer_tick(state, ports, t):
+    want = state["remaining"] > 0
+    ports, sent = ports.send(0, msg_new(WRITE_REQ, p0=state["addr"]),
+                             when=want)
+    state = dict(state)
+    state["remaining"] = state["remaining"] - sent.astype(jnp.int32)
+    state["addr"] = state["addr"] + 64
+    return state, ports, TickResult.make(sent)
+
+
+def build_sharded_memsys(mesh=None, n_shards: int = 1,
+                         tiles_per_shard: int = 4, n_reqs: int = 32,
+                         lookahead: float = 8.0):
+    """Each shard: a memsys tile + a writer streaming to the right-neighbor
+    shard's DRAM through the PDES gateway (ring topology, 1 peer)."""
+
+    # NB: the gateway ingress cannot share the DRAM's crossbar port (Akita:
+    # one connection per port), so the DRAM gets a second port for remote
+    # traffic.
+    def build_fn():
+        n_cores = tiles_per_shard
+        b = SimBuilder()
+        rng = np.random.default_rng(0)
+        remaining, think, seq = _workload("mixed", n_cores, n_reqs, rng)
+        cores = b.add_kind(ComponentKind(
+            "core", core_tick, n_cores, 1,
+            {"remaining": jnp.asarray(remaining),
+             "outstanding": jnp.zeros(n_cores, jnp.int32),
+             "addr": jnp.asarray(rng.integers(0, 1 << 20, n_cores),
+                                 jnp.int32),
+             "seq": jnp.asarray(seq), "think": jnp.asarray(think),
+             "tag": jnp.arange(n_cores, dtype=jnp.int32),
+             "next_issue": jnp.zeros(n_cores, jnp.float32)}, cap=2))
+        l1 = b.add_kind(ComponentKind(
+            "l1", l1_tick, n_cores, 2,
+            {"tags": jnp.full((n_cores, 64), -1, jnp.int32),
+             "mshr_busy": jnp.zeros(n_cores, jnp.int32),
+             "hits": jnp.zeros(n_cores, jnp.int32),
+             "misses": jnp.zeros(n_cores, jnp.int32)}, cap=2))
+        dram = b.add_kind(ComponentKind(
+            "dram", dram_tick, 1, 2, {"served": jnp.zeros(1, jnp.int32)},
+            cap=8))
+        writer = b.add_kind(ComponentKind(
+            "writer", remote_writer_tick, 1, 1,
+            {"remaining": jnp.full(1, n_reqs, jnp.int32),
+             "addr": jnp.zeros(1, jnp.int32)}, cap=2))
+        gw = add_gateway(b, n_peers=1, chan_per_peer=1, cap=8)
+        for i in range(n_cores):
+            b.connect([cores.port(i, 0), l1.port(i, 0)], latency=1.0)
+        b.connect([l1.port(i, 1) for i in range(n_cores)]
+                  + [dram.port(0, 0)], latency=16.0)
+        b.connect([writer.port(0, 0), gw.port(0, 0)], latency=1.0)
+        b.connect([gw.port(0, 1), dram.port(0, 1)], latency=1.0)
+        return b, gw
+
+    ss = ShardedSim(build_fn, n_shards=n_shards, n_peers=1,
+                    chan_per_peer=1, mesh=mesh, lookahead=lookahead,
+                    mailbox=8)
+    # the l1 crossbar needs explicit DRAM addressing (multi-member conn)
+    dram_pid = ss.sim.port_id("dram", 0, 0)
+    peer = np.asarray(ss.sim.c["peer"]).copy()
+    for i in range(tiles_per_shard):
+        peer[ss.sim.port_id("l1", i, 1)] = dram_pid
+    ss.sim.c["peer"] = jnp.asarray(peer)
+    return ss

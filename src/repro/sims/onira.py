@@ -1,0 +1,242 @@
+"""Onira: an in-order RISC-V-style timing model on the engine (paper §5.1).
+
+Five-stage-pipeline timing semantics (single issue, full forwarding,
+1-cycle load-use stall via a register scoreboard, 2-cycle taken-branch
+flush, non-blocking loads with a 4-entry load queue, one outstanding
+store), attached to a memory component over a latency-L connection — the
+paper's "single core, 5-cycle memory latency" setup.
+
+The ISA is a micro-subset sufficient for the paper's microbenchmarks:
+  ADDI rd, rs1, imm   (op=1)      LOAD rd, [rs1]     (op=2)
+  STORE [rs1], rd     (op=3)      BNEZ rs1, +imm     (op=4; taken if !=0)
+  HALT                (op=5)
+Accuracy is validated against closed-form pipeline CPI (our stand-in for
+the paper's Verilator RTL, which is unavailable offline — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ComponentKind, SimBuilder, TickResult, msg_new,
+                        msg_reply, payload)
+
+ADDI, LOAD, STORE, BNEZ, HALT = 1, 2, 3, 4, 5
+MAXI = 128
+
+
+def cpu_tick(state, ports, t):
+    state = dict(state)
+    progress = jnp.asarray(False)
+    # load response: p1 = destination register
+    msg, got, ports = ports.recv(0)
+    reg = payload(msg, 1)
+    state["busy"] = jnp.where(got, state["busy"].at[reg].set(0),
+                              state["busy"])
+    state["pending"] = state["pending"] - got.astype(jnp.int32)
+    progress = progress | got
+
+    halted = state["done"] > 0
+    flushing = t + 1e-3 < state["stall_until"]
+    pc = jnp.clip(state["pc"], 0, MAXI - 1)
+    inst = state["prog"][pc]                       # [4]
+    op, rd, rs1, imm = inst[0], inst[1], inst[2], inst[3]
+    can_issue = ~halted & ~flushing
+
+    src_busy = state["busy"][rs1] > 0
+    dst_busy = state["busy"][rd] > 0               # stores read rd as data
+
+    # ALU
+    do_alu = can_issue & (op == ADDI) & ~src_busy
+    state["regs"] = jnp.where(
+        do_alu, state["regs"].at[rd].set(state["regs"][rs1] + imm),
+        state["regs"])
+    # LOAD
+    can_load = can_issue & (op == LOAD) & ~src_busy & \
+        (state["pending"] < 4) & ports.can_send(0)
+    ports, sent_l = ports.send(
+        0, msg_new(1, p0=state["regs"][rs1], p1=rd), when=can_load)
+    state["busy"] = jnp.where(sent_l, state["busy"].at[rd].set(1),
+                              state["busy"])
+    state["pending"] = state["pending"] + sent_l.astype(jnp.int32)
+    # STORE (fire-and-forget, but bounded by buffer space)
+    can_store = can_issue & (op == STORE) & ~src_busy & ~dst_busy & \
+        ports.can_send(0)
+    ports, sent_s = ports.send(
+        0, msg_new(3, p0=state["regs"][rs1], p1=32), when=can_store)
+    # BRANCH (resolve in EX: 2-cycle flush when taken)
+    do_br = can_issue & (op == BNEZ) & ~src_busy
+    taken = do_br & (state["regs"][rs1] != 0)
+    # HALT
+    do_halt = can_issue & (op == HALT)
+    state["done"] = jnp.where(do_halt, 1, state["done"])
+    state["halt_time"] = jnp.where(do_halt, t, state["halt_time"])
+
+    issued = do_alu | sent_l | sent_s | do_br | do_halt
+    state["pc"] = jnp.where(
+        issued, jnp.where(taken, pc + imm, pc + 1), state["pc"])
+    state["retired"] = state["retired"] + issued.astype(jnp.int32)
+    state["stall_until"] = jnp.where(taken, t + 3.0, state["stall_until"])
+    # load-use stall bookkeeping (pure accounting)
+    state["stalls"] = state["stalls"] + \
+        (can_issue & ~issued).astype(jnp.int32)
+    progress = progress | issued
+    nxt = jnp.where(flushing & ~halted, state["stall_until"], -1.0)
+    return state, ports, TickResult.make(progress | flushing, next_time=nxt)
+
+
+def mem_tick(state, ports, t):
+    state = dict(state)
+    msg, got, ports = ports.recv(0, when=ports.can_send(0))
+    is_read = got & (msg[0] == 1)
+    ports, _ = ports.send(0, msg_reply(msg, 2, p0=payload(msg, 0),
+                                       p1=payload(msg, 1)), when=is_read)
+    state["served"] = state["served"] + got.astype(jnp.int32)
+    return state, ports, TickResult.make(got)
+
+
+# ---------------------------------------------------------------------------
+# assembler + microbenchmarks (paper Fig. 12/13)
+# ---------------------------------------------------------------------------
+def asm(instrs):
+    p = np.zeros((MAXI, 4), np.int32)
+    for i, ins in enumerate(instrs):
+        p[i] = ins + [0] * (4 - len(ins))
+    return p
+
+
+def prog_alu(n=64):
+    return asm([[ADDI, 1, 1, 1] for _ in range(n)] + [[HALT]])
+
+
+def prog_raw_hzd(n=32):
+    # load-use chains: LOAD r2,[r1]; ADDI r3,r2,1 (stalls full latency)
+    body = []
+    for _ in range(n):
+        body += [[LOAD, 2, 1, 0], [ADDI, 3, 2, 1]]
+    return asm(body + [[HALT]])
+
+
+def prog_br_loop(iters=16, body_n=4):
+    # r5 = iters; loop: body_n ALUs; ADDI r5,r5,-1; BNEZ r5, -body_n-1
+    pre = [[ADDI, 5, 0, iters]]
+    body = [[ADDI, 1, 1, 1] for _ in range(body_n)]
+    loop = body + [[ADDI, 5, 5, -1], [BNEZ, 5, 5, -(body_n + 1)]]
+    return asm(pre + loop + [[HALT]])
+
+
+def prog_nested_br(outer=4, inner=4):
+    pre = [[ADDI, 5, 0, outer]]
+    inner_l = [[ADDI, 6, 0, inner], [ADDI, 1, 1, 1], [ADDI, 6, 6, -1],
+               [BNEZ, 6, 6, -2]]
+    outer_l = inner_l + [[ADDI, 5, 5, -1], [BNEZ, 5, 5, -(len(inner_l) + 1)]]
+    return asm(pre + outer_l + [[HALT]])
+
+
+def prog_st_ld(n=16):
+    body = []
+    for _ in range(n):
+        body += [[STORE, 1, 1, 0], [LOAD, 2, 1, 0], [ADDI, 3, 2, 1]]
+    return asm(body + [[HALT]])
+
+
+def prog_conc_st(n=32):
+    return asm([[STORE, 1, 1, 0] for _ in range(n)] + [[HALT]])
+
+
+def prog_ind_ld(n=32):
+    # independent loads into rotating registers (no use: MLP-friendly)
+    return asm([[LOAD, 2 + (i % 4), 1, 0] for i in range(n)] + [[HALT]])
+
+
+def prog_mlp(n_indep: int, reps=None):
+    reps = reps or max(1, min(8, (MAXI - 1) // (2 * n_indep)))
+    body = []
+    for _ in range(reps):
+        for i in range(n_indep):
+            body.append([LOAD, 2 + (i % 28), 1, 0])
+        for i in range(n_indep):
+            body.append([ADDI, 1, 2 + (i % 28), 0])  # consume
+    return asm(body + [[HALT]])
+
+
+MICROBENCHES = {
+    "ALU": prog_alu, "RAW_HZD": prog_raw_hzd, "BR_LOOP": prog_br_loop,
+    "LOOP1": lambda: prog_br_loop(iters=32, body_n=1),
+    "NESTED_BR": prog_nested_br, "ST_LD": prog_st_ld,
+    "CONC_ST": prog_conc_st, "IND_LD": prog_ind_ld,
+}
+
+
+def build_onira(progs: list[np.ndarray], mem_latency: float = 5.0,
+                naive: bool = False):
+    n = len(progs)
+    b = SimBuilder()
+    cpu = b.add_kind(ComponentKind(
+        "cpu", cpu_tick, n, 1,
+        {"prog": jnp.asarray(np.stack(progs)),
+         "pc": jnp.zeros(n, jnp.int32),
+         "regs": jnp.zeros((n, 33), jnp.int32),
+         "busy": jnp.zeros((n, 33), jnp.int32),
+         "pending": jnp.zeros(n, jnp.int32),
+         "retired": jnp.zeros(n, jnp.int32),
+         "stalls": jnp.zeros(n, jnp.int32),
+         "done": jnp.zeros(n, jnp.int32),
+         "halt_time": jnp.zeros(n, jnp.float32),
+         "stall_until": jnp.zeros(n, jnp.float32)}, cap=4))
+    mem = b.add_kind(ComponentKind(
+        "mem", mem_tick, n, 1, {"served": jnp.zeros(n, jnp.int32)}, cap=4))
+    for i in range(n):
+        b.connect([cpu.port(i, 0), mem.port(i, 0)], latency=mem_latency)
+    sim = b.build(naive=naive)
+    return sim, sim.init_state()
+
+
+def run_microbenches(names=None, mem_latency=5.0, until=20000.0):
+    names = names or list(MICROBENCHES)
+    progs = [MICROBENCHES[n]() for n in names]
+    sim, st = build_onira(progs, mem_latency)
+    out = sim.run(st, until=until)
+    cs = out.comp_state["cpu"]
+    res = {}
+    for i, n in enumerate(names):
+        insts = int(cs["retired"][i])
+        cycles = float(cs["halt_time"][i])
+        res[n] = {"insts": insts, "cycles": cycles,
+                  "cpi": cycles / max(insts, 1),
+                  "done": bool(cs["done"][i])}
+    return res
+
+
+def run_mlp_sweep(n_values=(1, 2, 4, 8, 16), mem_latency=5.0):
+    progs = [prog_mlp(n) for n in n_values]
+    sim, st = build_onira(progs, mem_latency)
+    out = sim.run(st, until=50000.0)
+    cs = out.comp_state["cpu"]
+    return {n: float(cs["halt_time"][i]) / max(int(cs["retired"][i]), 1)
+            for i, n in enumerate(n_values)}
+
+
+# Closed-form pipeline reference (our RTL stand-in; DESIGN.md §7)
+def analytic_cpi(name: str, mem_latency: float = 5.0) -> float:
+    L = mem_latency + 1  # + request wire cycle
+    if name == "ALU":
+        return 1.0
+    if name == "RAW_HZD":
+        # per pair: LOAD issues, ADDI waits full round-trip (2L), then 1
+        return (1 + 2 * L + 1) / 2
+    if name in ("BR_LOOP", "LOOP1"):
+        body = 4 if name == "BR_LOOP" else 1
+        per_iter = body + 2 + 2  # insts + dec/bnez + flush
+        return per_iter / (body + 2)
+    if name == "NESTED_BR":
+        return 1.6  # mixed flushes, approximate
+    if name == "ST_LD":
+        return (3 + 2 * L) / 3  # ld-use exposed each triple
+    if name == "CONC_ST":
+        # fire-and-forget through a 4-deep buffer drained 1/cycle after L
+        return 1.25
+    if name == "IND_LD":
+        # 4-entry load queue, round trip = L (req) + 1 (service) + L (resp)
+        return (2 * mem_latency + 1) / 4
+    raise KeyError(name)

@@ -1,0 +1,171 @@
+"""TrioSim: trace-driven multi-GPU DNN-training simulator (paper §5.2).
+
+Purely event-driven on the Akita engine: each operator becomes ONE event
+(compute ops fast-forward with ``next_time``; the paper: "condenses each
+kernel/operator into a single event and fast-forwards without simulating
+microarchitectural details").  Data movement uses a flow-based network
+component (cf. Narses [17]) instead of cycle-level ports — the paper's
+"alternative implementation of ports and connections".
+
+Virtual time unit: 1 µs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ComponentKind, SimBuilder, TickResult, msg_new,
+                        payload)
+from .opgraph import COLL, COMPUTE, DONE, P2P_RECV, P2P_SEND, HW
+
+REQ_COLL, REQ_P2P, DATA = 10, 11, 12
+
+
+def gpu_tick(state, ports, t):
+    state = dict(state)
+    progress = jnp.asarray(False)
+    msg, got, ports = ports.recv(0)
+    tag_in = payload(msg, 1)
+    state["got"] = jnp.where(got, state["got"].at[tag_in].set(1),
+                             state["got"])
+    progress = progress | got
+
+    idx = state["idx"]
+    op = state["ops"][idx]                     # [4]
+    kind, size, tag, peer = op[0], op[1], op[2], op[3]
+    infl = state["in_flight"] > 0
+
+    # COMPUTE: schedule completion, then retire
+    start_c = (kind == COMPUTE) & ~infl
+    fin_c = (kind == COMPUTE) & infl & (t + 1e-3 >= state["busy_until"])
+    state["busy_until"] = jnp.where(start_c, t + size.astype(jnp.float32),
+                                    state["busy_until"])
+    # COLL: request once, wait for completion tag
+    start_k = (kind == COLL) & ~infl & ports.can_send(0)
+    ports, sent_k = ports.send(
+        0, msg_new(REQ_COLL, p0=size, p1=tag, p2=peer), when=start_k)
+    fin_k = (kind == COLL) & infl & (state["got"][tag] > 0)
+    # P2P
+    can_s = (kind == P2P_SEND) & ports.can_send(0)
+    ports, sent_p = ports.send(
+        0, msg_new(REQ_P2P, p0=size, p1=tag, p2=peer), when=can_s)
+    fin_r = (kind == P2P_RECV) & (state["got"][tag] > 0)
+    # DONE
+    fin_d = (kind == DONE) & (state["done"] == 0)
+    state["done"] = jnp.where(fin_d, 1, state["done"])
+    state["done_time"] = jnp.where(fin_d, t, state["done_time"])
+
+    retire = fin_c | fin_k | sent_p | fin_r
+    state["idx"] = jnp.clip(state["idx"] + retire.astype(jnp.int32), 0,
+                            state["ops"].shape[0] - 1)
+    state["in_flight"] = jnp.where(
+        retire | fin_d, 0,
+        jnp.where(start_c | sent_k, 1, state["in_flight"]))
+    progress = progress | retire | start_c | sent_k | fin_d
+    nxt = jnp.where(start_c | (fin_c & False), state["busy_until"], -1.0)
+    nxt = jnp.where(retire, t + 1.0, nxt)      # look at the next op
+    return state, ports, TickResult.make(progress, next_time=nxt)
+
+
+def make_network_tick(n_gpus: int, hw: HW):
+    inv_bw_us_per_kb = 1024.0 / hw.link_bw * 1e6
+
+    def network_tick(state, ports, t):
+        state = dict(state)
+        progress = jnp.asarray(False)
+        for p in range(n_gpus):
+            msg, got, ports = ports.recv(p)
+            kb = payload(msg, 0).astype(jnp.float32)
+            tag = payload(msg, 1)
+            grp = payload(msg, 2)
+            is_coll = got & (msg[0] == REQ_COLL)
+            is_p2p = got & (msg[0] == REQ_P2P)
+            progress = progress | got
+            # collective bookkeeping
+            cnt = state["cnt"].at[tag].add(is_coll.astype(jnp.int32))
+            state["cnt"] = jnp.where(got, cnt, state["cnt"])
+            state["members"] = jnp.where(
+                is_coll, state["members"].at[tag].add(
+                    jnp.asarray(1 << p, jnp.int32)), state["members"])
+            full = is_coll & (state["cnt"][tag] >= grp)
+            dur = 2.0 * (grp - 1).astype(jnp.float32) / \
+                jnp.maximum(grp, 1).astype(jnp.float32) * kb * \
+                inv_bw_us_per_kb + hw.coll_alpha_us
+            state["done_t"] = jnp.where(
+                full, state["done_t"].at[tag].set(t + dur), state["done_t"])
+            # p2p: serialize per destination channel (flow model)
+            dstp = jnp.clip(grp, 0, n_gpus - 1)
+            arr = jnp.maximum(t, state["chan_free"][dstp]) + \
+                kb * inv_bw_us_per_kb + hw.coll_alpha_us
+            state["chan_free"] = jnp.where(
+                is_p2p, state["chan_free"].at[dstp].set(arr),
+                state["chan_free"])
+            state["done_t"] = jnp.where(
+                is_p2p, state["done_t"].at[tag].set(arr), state["done_t"])
+            state["members"] = jnp.where(
+                is_p2p, state["members"].at[tag].set(
+                    (1 << dstp).astype(jnp.int32)), state["members"])
+        # deliver due completions, one per port per tick
+        due_any = jnp.asarray(False)
+        for p in range(n_gpus):
+            bit = jnp.asarray(1 << p, jnp.int32)
+            due = ((state["done_t"] <= t + 1e-3)
+                   & ((state["members"] & bit) > 0)
+                   & ((state["sent"] & bit) == 0))
+            tagp = jnp.argmin(
+                jnp.where(due, state["done_t"], jnp.inf)).astype(jnp.int32)
+            have = jnp.any(due)
+            ports, sent = ports.send(p, msg_new(DATA, p1=tagp), when=have)
+            state["sent"] = jnp.where(
+                sent, state["sent"].at[tagp].add(bit), state["sent"])
+            progress = progress | sent
+            due_any = due_any | have
+        # sleep until the next completion still owed to someone
+        owed = (state["done_t"] < jnp.inf) & \
+            (state["sent"] != state["members"])
+        nxt_t = jnp.min(jnp.where(owed, jnp.maximum(state["done_t"], t + 1.0),
+                                  jnp.inf))
+        nxt = jnp.where(jnp.isfinite(nxt_t), nxt_t, -1.0)
+        return state, ports, TickResult.make(progress, next_time=nxt)
+
+    return network_tick
+
+
+def build_triosim(ops: np.ndarray, n_tags: int, hw: HW = HW()):
+    """ops: [n_dev, MAX, 4] from opgraph.build_train_trace."""
+    n_dev = ops.shape[0]
+    assert n_dev <= 30, "bitmap member encoding limit"
+    mt = max(n_tags + 1, 2)
+    b = SimBuilder()
+    gpus = b.add_kind(ComponentKind(
+        "gpu", gpu_tick, n_dev, 1,
+        {"ops": jnp.asarray(ops), "idx": jnp.zeros(n_dev, jnp.int32),
+         "in_flight": jnp.zeros(n_dev, jnp.int32),
+         "busy_until": jnp.zeros(n_dev, jnp.float32),
+         "done": jnp.zeros(n_dev, jnp.int32),
+         "done_time": jnp.zeros(n_dev, jnp.float32),
+         "got": jnp.zeros((n_dev, mt), jnp.int32)}, cap=4))
+    net = b.add_kind(ComponentKind(
+        "net", make_network_tick(n_dev, hw), 1, n_dev,
+        {"cnt": jnp.zeros((1, mt), jnp.int32),
+         "members": jnp.zeros((1, mt), jnp.int32),
+         "sent": jnp.zeros((1, mt), jnp.int32),
+         "done_t": jnp.full((1, mt), jnp.inf, jnp.float32),
+         "chan_free": jnp.zeros((1, n_dev), jnp.float32)}, cap=4))
+    for g in range(n_dev):
+        b.connect([gpus.port(g, 0), net.port(0, g)], latency=1.0)
+    sim = b.build()
+    return sim, sim.init_state()
+
+
+def simulate_step(cfg, batch, seq, dp=1, tp=1, pp=1, micro=4, hw=HW(),
+                  until=5e6):
+    from .opgraph import build_train_trace
+    ops, n_tags = build_train_trace(cfg, batch, seq, dp, tp, pp, micro, hw)
+    sim, st = build_triosim(ops, n_tags, hw)
+    out = sim.run(st, until=until, max_epochs=500_000)
+    cs = out.comp_state["gpu"]
+    done = bool(np.all(np.asarray(cs["done"]) == 1))
+    step_us = float(np.max(np.asarray(cs["done_time"])))
+    return {"done": done, "step_us": step_us,
+            "epochs": int(out.stats.epochs)}

@@ -1,0 +1,153 @@
+"""train_step factory: loss -> grads (accumulated over microbatches) ->
+clip -> AdamW, with full logical-axis shardings for the production meshes.
+
+The same factory serves real CPU training (tests/examples, tiny configs) and
+the multi-pod dry-run (abstract params/batch, ``.lower().compile()`` only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.layers import (abstract_params, init_params,
+                                 make_pspecs, make_shardings)
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+from repro.parallel.sharding import (batch_pspec, data_axes,
+                                     make_rules_for_mesh)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    micro_batches: int = 1
+    moments_dtype: str = "float32"     # "int8" => 8-bit optimizer states
+    donate: bool = True
+
+
+def make_train_step(cfg, hp: TrainHParams):
+    """Returns train_step(params, opt_state, batch) -> (loss, params, opt)."""
+
+    def loss_fn(params, batch):
+        return tfm.train_loss(params, cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if hp.micro_batches > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            def split(x):
+                return x.reshape((hp.micro_batches,
+                                  x.shape[0] // hp.micro_batches) +
+                                 x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)),
+                                           mbs)
+            grads = jax.tree.map(lambda g: g / hp.micro_batches, gsum)
+            loss = lsum / hp.micro_batches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, hp.grad_clip)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=hp.lr,
+            weight_decay=hp.weight_decay, moments_dtype=hp.moments_dtype)
+        return loss, gnorm, params, opt_state
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly for a concrete mesh
+# ---------------------------------------------------------------------------
+def opt_pspecs(param_pspecs, moments_dtype="float32"):
+    """Optimizer-state PartitionSpecs mirror the parameter sharding (ZeRO-3:
+    moments fully sharded the same way as their parameters)."""
+    def mom(ps):
+        if moments_dtype == "int8":
+            # int8 blocks flatten the tensor; shard the block axis on the
+            # first parameter axis's assignment when possible, else replicate
+            return {"q": P(ps[0] if len(ps) else None),
+                    "s": P(ps[0] if len(ps) else None)}
+        return ps
+
+    return {
+        "m": jax.tree.map(mom, param_pspecs,
+                          is_leaf=lambda x: isinstance(x, P)),
+        "v": jax.tree.map(mom, param_pspecs,
+                          is_leaf=lambda x: isinstance(x, P)),
+        "count": P(),
+    }
+
+
+def batch_pspecs(cfg, mesh, shape):
+    """PartitionSpecs for the input batch of a given assigned shape."""
+    bp = batch_pspec(mesh, shape.global_batch)
+    specs = {}
+    if cfg.frontend == "audio":
+        specs["features"] = P(*bp, None, None)
+        specs["labels"] = P(*bp, None)
+        specs["mask"] = P(*bp, None)
+    elif cfg.frontend == "vision":
+        specs["tokens"] = P(*bp, None)
+        specs["vision"] = P(*bp, None, None)
+    else:
+        specs["tokens"] = P(*bp, None)
+    return specs
+
+
+def assemble_train(cfg, mesh, shape, hp: TrainHParams | None = None):
+    """Abstract args + jitted train_step with shardings, ready to lower."""
+    hp = hp or TrainHParams()
+    rules = make_rules_for_mesh(cfg, mesh)
+    specs = tfm.model_specs(cfg)
+    p_pspecs = make_pspecs(specs, rules)
+    params = abstract_params(specs)
+    opt_shape = jax.eval_shape(
+        partial(adamw_init, moments_dtype=hp.moments_dtype), params)
+    o_pspecs = opt_pspecs(p_pspecs, hp.moments_dtype)
+    b_pspecs = batch_pspecs(cfg, mesh, shape)
+    batch = abstract_batch(cfg, shape)
+
+    step = make_train_step(cfg, hp)
+    jitted = jax.jit(
+        step,
+        in_shardings=(jax.tree.map(lambda s: NamedSharding(mesh, s), p_pspecs),
+                      jax.tree.map(lambda s: NamedSharding(mesh, s), o_pspecs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+                      jax.tree.map(lambda s: NamedSharding(mesh, s), b_pspecs)),
+        out_shardings=(NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+                       jax.tree.map(lambda s: NamedSharding(mesh, s), p_pspecs),
+                       jax.tree.map(lambda s: NamedSharding(mesh, s), o_pspecs,
+                                    is_leaf=lambda x: isinstance(x, P))),
+        donate_argnums=(0, 1) if hp.donate else ())
+    return jitted, (params, opt_shape, batch)
+
+
+def abstract_batch(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": f((B, 1), jnp.int32)}
+    if cfg.frontend == "audio":
+        return {"features": f((B, S, cfg.frontend_dim), jnp.float32),
+                "labels": f((B, S), jnp.int32),
+                "mask": f((B, S), jnp.float32)}
+    if cfg.frontend == "vision":
+        nv = cfg.n_vision_tokens
+        return {"tokens": f((B, S - nv), jnp.int32),
+                "vision": f((B, nv, cfg.d_model), jnp.float32)}
+    return {"tokens": f((B, S), jnp.int32)}

@@ -1,0 +1,77 @@
+"""Ring-buffer port properties (hypothesis): FIFO order, capacity limits,
+no phantom messages, send/recv round-trips."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.message import MSG_WORDS, msg_new
+from repro.core.ports import Ports
+
+
+def _empty(P=1, CAP=4):
+    return Ports(
+        in_buf=jnp.zeros((P, CAP, MSG_WORDS), jnp.int32),
+        in_head=jnp.zeros((P,), jnp.int32),
+        in_cnt=jnp.zeros((P,), jnp.int32),
+        out_buf=jnp.zeros((P, CAP, MSG_WORDS), jnp.int32),
+        out_head=jnp.zeros((P,), jnp.int32),
+        out_cnt=jnp.zeros((P,), jnp.int32),
+        cap=jnp.full((P,), CAP, jnp.int32),
+        gid=jnp.arange(P, dtype=jnp.int32),
+        peer=jnp.full((P,), -1, jnp.int32),
+        t=jnp.float32(0.0),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.integers(0, 1), min_size=1, max_size=24),
+       cap=st.integers(1, 4))
+def test_out_ring_fifo_and_capacity(ops, cap):
+    """Random send(payload=i) sequences: never exceed cap; contents FIFO."""
+    p = _empty(CAP=4)
+    p = Ports(**{**p.__dict__, "cap": jnp.full((1,), cap, jnp.int32)})
+    model = []                     # reference queue
+    sent_seq = 0
+    for op in ops:
+        if op == 0:   # send
+            p2, ok = p.send(0, msg_new(1, p0=sent_seq))
+            if len(model) < cap:
+                assert bool(ok)
+                model.append(sent_seq)
+            else:
+                assert not bool(ok)
+            p = p2
+            sent_seq += 1
+        else:         # connection-side pop (head of out ring)
+            if model:
+                head = p.out_buf[0, p.out_head[0]]
+                assert int(head[4]) == model.pop(0)
+                p = Ports(**{**p.__dict__,
+                             "out_head": (p.out_head + 1) % 4,
+                             "out_cnt": p.out_cnt - 1})
+        assert int(p.out_cnt[0]) == len(model)
+
+
+def test_recv_respects_ready_time():
+    from repro.core.message import W_TIME, f2i
+    p = _empty()
+    m = msg_new(1, p0=7).at[W_TIME].set(f2i(5.0))
+    p = Ports(**{**p.__dict__,
+                 "in_buf": p.in_buf.at[0, 0].set(m),
+                 "in_cnt": p.in_cnt.at[0].set(1)})
+    msg, ok, p2 = p.recv(0)                 # t=0 < ready=5
+    assert not bool(ok) and int(p2.in_cnt[0]) == 1
+    p = Ports(**{**p.__dict__, "t": jnp.float32(5.0)})
+    msg, ok, p2 = p.recv(0)
+    assert bool(ok) and int(msg[4]) == 7 and int(p2.in_cnt[0]) == 0
+
+
+def test_send_fills_src_and_default_peer():
+    p = _empty()
+    p = Ports(**{**p.__dict__, "peer": jnp.full((1,), 42, jnp.int32),
+                 "gid": jnp.full((1,), 7, jnp.int32)})
+    p2, ok = p.send(0, msg_new(1))
+    assert bool(ok)
+    head = p2.out_buf[0, 0]
+    assert int(head[1]) == 7 and int(head[2]) == 42

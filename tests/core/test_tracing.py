@@ -1,0 +1,150 @@
+"""Tracing system tests: task tree, tracers, DB, backtraces, engine flush,
+monitor + bottleneck analyzer, Daisen export."""
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import daisen
+from repro.core.monitor import Monitor
+from repro.core.tracers import (AverageTimeTracer, BusyTimeTracer, DBTracer,
+                                TagCountTracer, TotalTimeTracer,
+                                flush_engine_trace)
+from repro.core.tracing import TracingDomain, format_backtrace
+
+
+def _clock():
+    t = {"v": 0.0}
+
+    def fn():
+        t["v"] += 1.0
+        return t["v"]
+
+    return fn
+
+
+def test_task_tree_and_tracers():
+    dom = TracingDomain("t", time_fn=_clock())
+    tot = dom.attach(TotalTimeTracer())
+    avg = dom.attach(AverageTimeTracer(),
+                     filter=lambda t: t.category == "mem")
+    busy = dom.attach(BusyTimeTracer())
+    tags = dom.attach(TagCountTracer())
+    with dom.task("inst", "load", "core0") as t1:
+        dom.tag_task("issued")
+        with dom.task("mem", "read", "l1") as t2:
+            dom.tag_task("cache-hit")
+            assert t2.parent_id == t1.id
+    assert tot.metrics()["count"] == 2
+    assert avg.metrics()["count"] == 1            # filter applied
+    assert tags.metrics() == {"issued": 1, "cache-hit": 1}
+    assert busy.metrics()["core0"] > 0
+
+
+def test_db_tracer_and_daisen_export(tmp_path):
+    dom = TracingDomain("t", time_fn=_clock())
+    db = dom.attach(DBTracer(str(tmp_path / "trace.db"), run_id="r1"))
+    with dom.task("step", "train", "loop"):
+        with dom.task("mem", "read", "l1"):
+            pass
+    db.flush()
+    tasks = db.fetch_tasks()
+    assert len(tasks) == 2
+    child = [t for t in tasks if t.category == "mem"][0]
+    parent = [t for t in tasks if t.category == "step"][0]
+    assert child.parent_id == parent.id
+    out = daisen.export_db(db, str(tmp_path / "trace.html"))
+    html = open(out).read()
+    assert "Daisen-lite" in html and "l1" in html
+    db.add_metric("buf_level", "l1.p0", 1.0, 3.0)
+    assert db.fetch_metrics("buf_level")[0][3] == 3.0
+    db.close()
+
+
+def test_csv_tracer(tmp_path):
+    dom = TracingDomain("t", time_fn=_clock())
+    db = dom.attach(DBTracer(str(tmp_path / "trace.csv"), backend="csv"))
+    with dom.task("a", "b", "c"):
+        pass
+    db.close()
+    lines = open(tmp_path / "trace.csv").read().splitlines()
+    assert len(lines) == 2 and lines[0].startswith("id,")
+
+
+def test_enhanced_backtrace():
+    dom = TracingDomain("t", time_fn=_clock())
+    try:
+        with dom.task("inst", "load $2,[$4]", "Core3"):
+            with dom.task("translation", "vaddr 0x1000", "MMU"):
+                raise RuntimeError("Page entry not found")
+    except RuntimeError:
+        pass
+    # after unwinding, a fresh backtrace is empty; format chain directly
+    bt = format_backtrace(header="Panic: page fault", chain=[])
+    assert bt.startswith("Panic")
+
+
+def test_backtrace_renders_chain(capsys):
+    dom = TracingDomain("t", time_fn=_clock())
+    with pytest.raises(RuntimeError):
+        with dom.task("inst", "load", "Core3"):
+            with dom.task("translation", "vaddr", "MMU"):
+                raise RuntimeError("boom")
+    out = capsys.readouterr().out
+    assert "@Core3, inst, load" in out
+    assert "@MMU, translation, vaddr" in out
+
+
+def test_engine_flush_and_monitor(tmp_path):
+    from repro.sims.memsys import build, finish_stats
+    sim, st = build(n_cores=4, pattern="mixed", n_reqs=16,
+                    sample_period=16.0)
+    mon = Monitor(sim, st)
+    final, hung = mon.run_monitored(until=5000.0, chunk=500.0, verbose=False)
+    assert not hung
+    assert finish_stats(sim, final)["remaining"] == 0
+    dom = TracingDomain("t")
+    db = DBTracer(str(tmp_path / "engine.db"))
+    flush_engine_trace(sim, final, db)
+    assert len(db.fetch_metrics("busy_ticks")) > 0
+    assert len(db.fetch_metrics("buf_level")) > 0
+    db.close()
+
+
+def test_monitor_detects_hang():
+    """A consumer that never drains (cap-1 producer into sleeping consumer
+    kind that refuses to pop) should be flagged by the bottleneck analyzer."""
+    from repro.core import ComponentKind, SimBuilder, TickResult, msg_new
+
+    def stuck_tick(state, ports, t):
+        return state, ports, TickResult.make(jnp.asarray(False))
+
+    def spammer_tick(state, ports, t):
+        ports, ok = ports.send(0, msg_new(1), when=state["n"] > 0)
+        return {"n": state["n"] - ok.astype(jnp.int32)}, ports, \
+            TickResult.make(ok)
+
+    b = SimBuilder()
+    sp = b.add_kind(ComponentKind("spam", spammer_tick, 1, 1,
+                                  {"n": jnp.full(1, 8, jnp.int32)}, cap=1))
+    stk = b.add_kind(ComponentKind("stuck", stuck_tick, 1, 1,
+                                   {"_": jnp.zeros(1, jnp.int32)}, cap=1))
+    b.connect([sp.port(0, 0), stk.port(0, 0)], latency=1.0)
+    sim = b.build()
+    mon = Monitor(sim, sim.init_state())
+    _, hung = mon.run_monitored(until=10000.0, chunk=100.0, hang_chunks=2,
+                                verbose=False)
+    assert hung
+    rows = mon.bottleneck_report()
+    assert any("stuck" in r["port"] and r["stalled_consumer"] for r in rows)
+
+
+def test_monitor_inspect_and_force_tick():
+    from repro.sims.memsys import build
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4)
+    mon = Monitor(sim, st)
+    mon.state = sim.run(st, until=10.0)
+    fields = mon.inspect("core", 0)
+    assert "remaining" in fields
+    stat = mon.force_tick("core", 0)
+    assert stat["epochs"] >= 1

@@ -1,0 +1,54 @@
+"""Flash-attention kernel: interpret-mode allclose vs the pure-jnp oracle,
+swept over shapes, dtypes, GQA group counts, masks, windows, softcaps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import kernel as fak
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _mk(B, Sq, Sk, H, KV, hd, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+CASES = [
+    # B, S, H, KV, hd, causal, window, cap
+    (1, 128, 2, 2, 32, True, 0, 0.0),
+    (2, 256, 4, 2, 16, True, 0, 0.0),       # GQA G=2
+    (1, 256, 4, 1, 32, True, 64, 0.0),      # sliding window, G=4
+    (2, 128, 2, 2, 64, True, 0, 50.0),      # softcap
+    (1, 128, 4, 4, 32, False, 0, 0.0),      # bidirectional (hubert)
+    (1, 512, 8, 2, 64, True, 128, 30.0),    # everything at once
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, S, H, KV, hd, causal, window, cap = case
+    q, k, v = _mk(B, S, S, H, KV, hd, dtype)
+    out = fak.flash_attention(q, k, v, n_kv_heads=KV, causal=causal,
+                              window=window, cap=cap, block_q=64, block_k=64,
+                              interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_block_shape_independence():
+    q, k, v = _mk(1, 256, 256, 2, 2, 32, jnp.float32)
+    outs = []
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        outs.append(np.asarray(fak.flash_attention(
+            q, k, v, n_kv_heads=2, causal=True, block_q=bq, block_k=bk,
+            interpret=True)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)

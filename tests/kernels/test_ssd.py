@@ -1,0 +1,61 @@
+"""SSD kernel: interpret-mode allclose vs the sequential-recurrence oracle
+(and the chunked jnp form), swept over shapes/dtypes/chunk sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd import kernel as ssdk
+from repro.kernels.ssd.ref import ssd_chunked, ssd_ref
+
+
+def _mk(B, S, H, P, N, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    xs = jax.random.normal(ks[0], (B, S, H, P), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(ks[1], (B, S, H), jnp.float32) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B_ = jax.random.normal(ks[3], (B, S, N), jnp.float32).astype(dtype)
+    C_ = jax.random.normal(jax.random.PRNGKey(seed + 9), (B, S, N),
+                           jnp.float32).astype(dtype)
+    return xs, dt, A, B_, C_
+
+
+CASES = [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 3, 32, 16, 32),
+    (1, 256, 2, 64, 64, 64),   # mamba2-130m-like head
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_matches_recurrence(B, S, H, P, N, chunk, dtype):
+    xs, dt, A, B_, C_ = _mk(B, S, H, P, N, dtype)
+    y, hT = ssdk.ssd(xs, dt, A, B_, C_, chunk=chunk, interpret=True)
+    y_ref, hT_ref = ssd_ref(xs, dt, A, B_, C_)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_chunked_jnp_matches_recurrence():
+    xs, dt, A, B_, C_ = _mk(1, 128, 2, 16, 8, jnp.float32)
+    y1, h1 = ssd_chunked(xs, dt, A, B_, C_, chunk=16)
+    y2, h2 = ssd_ref(xs, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_chunk_size_independence():
+    xs, dt, A, B_, C_ = _mk(1, 128, 2, 16, 8, jnp.float32, seed=3)
+    outs = [np.asarray(ssdk.ssd(xs, dt, A, B_, C_, chunk=c,
+                                interpret=True)[0])
+            for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-4)

@@ -1,0 +1,117 @@
+"""Subprocess dry-run tests with 8 fake devices: lowering+compiling a tiny
+config on (2,2)/(2,2,2) meshes, plus the sharded-PDES engine on 8 shards.
+Subprocesses are required because device count is locked at first jax use.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+
+
+def _run(code: str, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+@pytest.mark.slow
+def test_train_step_lowers_on_test_meshes():
+    r = _run("""
+        import jax, dataclasses
+        from repro.configs import SHAPES, get_smoke_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.train.step import TrainHParams, assemble_train
+        from repro.parallel.sharding import (activation_sharding,
+                                             make_rules_for_mesh)
+        cfg = dataclasses.replace(get_smoke_config("stablelm-1.6b"),
+                                  d_model=64, n_heads=4, n_kv_heads=4,
+                                  head_dim=16, d_ff=128)
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                    global_batch=8)
+        for mp in (False, True):
+            mesh = make_test_mesh(multi_pod=mp)
+            jitted, args = assemble_train(cfg, mesh, shape, TrainHParams())
+            with mesh, activation_sharding(mesh,
+                                           make_rules_for_mesh(cfg, mesh)):
+                compiled = jitted.lower(*args).compile()
+            mem = compiled.memory_analysis()
+            assert mem.temp_size_in_bytes > 0
+            print("OK", mp, mem.temp_size_in_bytes)
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert r.stdout.count("OK") == 2
+
+
+@pytest.mark.slow
+def test_decode_step_lowers_on_test_mesh():
+    r = _run("""
+        import jax, dataclasses
+        from repro.configs import SHAPES, get_smoke_config
+        from repro.launch.mesh import make_test_mesh
+        from repro.serve.step import assemble_decode
+        cfg = dataclasses.replace(get_smoke_config("deepseek-67b"),
+                                  d_model=64, n_heads=4, n_kv_heads=2,
+                                  head_dim=32, d_ff=128)
+        shape = dataclasses.replace(SHAPES["decode_32k"], seq_len=128,
+                                    global_batch=8)
+        mesh = make_test_mesh()
+        jitted, args = assemble_decode(cfg, mesh, shape)
+        with mesh:
+            compiled = jitted.lower(*args).compile()
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+
+
+@pytest.mark.slow
+def test_pdes_runs_on_8_shards():
+    """The sharded conservative-PDES engine actually RUNS (not just lowers)
+    on 8 fake devices, and cross-shard writes arrive at neighbor DRAMs."""
+    r = _run("""
+        import jax
+        import numpy as np
+        from repro.launch.mesh import make_sim_mesh
+        from repro.sims.memsys import build_sharded_memsys
+        n = len(jax.devices())
+        assert n == 8
+        mesh = make_sim_mesh(n)
+        ss = build_sharded_memsys(mesh=mesh, n_shards=n, tiles_per_shard=2,
+                                  n_reqs=8)
+        st = ss.shard_state(ss.init_state())
+        out = ss.run(st, until=3000.0)
+        served = np.asarray(out.comp_state["dram"]["served"])
+        writers = np.asarray(out.comp_state["writer"]["remaining"])
+        assert writers.sum() == 0, writers     # all remote writes issued
+        # local reads (2 cores x 8 each may hit caches) + remote writes: the
+        # DRAM on every shard must have served its neighbor's 8 writes.
+        assert (served.reshape(n, -1).sum(axis=1) >= 8).all(), served
+        print("OK", served.tolist())
+    """)
+    assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])
+
+
+@pytest.mark.slow
+def test_pdes_matches_single_shard_semantics():
+    """1-shard PDES == plain engine on the same local topology (gateway
+    traffic aside): message conservation check."""
+    r = _run("""
+        import jax
+        import numpy as np
+        from repro.sims.memsys import build_sharded_memsys
+        ss = build_sharded_memsys(n_shards=1, tiles_per_shard=2, n_reqs=8)
+        st = ss.init_state()
+        out = ss.run(st, until=3000.0)
+        core = out.comp_state["core"]
+        assert np.asarray(core["remaining"]).sum() == 0
+        assert np.asarray(core["outstanding"]).sum() == 0
+        print("OK")
+    """)
+    assert r.returncode == 0, (r.stderr[-3000:], r.stdout[-500:])

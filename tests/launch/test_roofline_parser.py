@@ -1,0 +1,66 @@
+"""Roofline HLO parser unit tests on synthetic HLO text: loop-trip
+multipliers, collective ring factors, dot FLOPs, aliased-op exclusion."""
+from repro.launch.roofline import parse_collectives, parse_hlo
+
+HLO = """\
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%cond.1 (arg: (s32[], f32[8,16])) -> pred[] {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %lim = s32[] constant(10)
+  ROOT %cmp = pred[] compare(%i, %lim), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups=[4,4]<=[16], to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ip, %ar)
+}
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %p0)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+  %ag = f32[32,16]{1,0} all-gather(%p0), replica_groups=[4,4]<=[16], dimensions={0}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_collectives_with_loop_multiplier_and_ring_factor():
+    st = parse_collectives(HLO, 16)
+    # all-reduce inside 10-trip loop: 2 * 8*16*4 B * (4-1)/4 * 10
+    ar = 2 * 8 * 16 * 4 * 0.75 * 10
+    # all-gather outside: result 32*16*4 B * 3/4
+    ag = 32 * 16 * 4 * 0.75
+    assert abs(st.bytes_by_op["all-reduce"] - ar) < 1e-6
+    assert abs(st.bytes_by_op["all-gather"] - ag) < 1e-6
+
+
+def test_dot_flops_with_loop_multiplier():
+    st = parse_hlo(HLO, 16)
+    # dot: 2 * (8*16 out) * K=16 * 10 trips
+    assert abs(st.dot_flops - 2 * 8 * 16 * 16 * 10) < 1e-6
+
+
+def test_aliased_ops_excluded_from_bytes():
+    st = parse_hlo(HLO, 16)
+    # gte/tuple/parameter/constant contribute nothing; counted inside loop:
+    # dot result + all-reduce result, each 8*16*4 B * 10 trips; outside:
+    # the all-gather result 32*16*4 and the s32 adds (4 B * 10).
+    expect = (8 * 16 * 4) * 2 * 10 + 32 * 16 * 4 + 4 * 10
+    assert abs(st.result_bytes - expect) < 1e-6

@@ -1,0 +1,69 @@
+"""Every (assigned arch × production mesh) must yield divisible parameter
+shardings — the static guarantee behind the dry-run's zero sharding errors.
+Runs meshless: validates PSpec dims against the mesh axis sizes directly."""
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as tfm
+from repro.models.layers import PSpec
+from repro.parallel.sharding import make_rules
+
+MESHES = {
+    "16x16": {"data": 16, "model": 16, "_dp": ("data",)},
+    "2x16x16": {"pod": 2, "data": 16, "model": 16, "_dp": ("pod", "data")},
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+def test_param_shardings_divide(arch, mesh_name):
+    import jax
+    m = MESHES[mesh_name]
+    cfg = get_config(arch)
+    rules = make_rules(cfg, m["model"], m["_dp"])
+    specs = tfm.model_specs(cfg)
+
+    bad = []
+
+    def check(path, ps):
+        for dim, ax in zip(ps.shape, ps.axes):
+            phys = rules.get(ax) if ax is not None else None
+            if phys is None:
+                continue
+            names = (phys,) if isinstance(phys, str) else phys
+            n = 1
+            for nm in names:
+                n *= m[nm]
+            if dim % n != 0:
+                bad.append((path, ps.shape, ax, n))
+
+    def walk(tree, path=""):
+        if isinstance(tree, PSpec):
+            check(path, tree)
+        elif isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, f"{path}/{k}")
+
+    walk(specs)
+    assert not bad, bad
+
+
+def test_kv_fallbacks_active_where_needed():
+    # kv=8 archs cannot shard kv heads over 16 — the rule must fall back
+    for arch in ("deepseek-67b", "grok-1-314b", "internvl2-26b"):
+        cfg = get_config(arch)
+        rules = make_rules(cfg, 16, ("data",))
+        assert rules["tensor_kv"] is None
+    # phi3's 40 q-heads don't divide 16 either
+    assert make_rules(get_config("phi3-medium-14b"), 16,
+                      ("data",))["tensor_q"] is None
+    # but stablelm (32 heads) shards fine
+    assert make_rules(get_config("stablelm-1.6b"), 16,
+                      ("data",))["tensor_q"] == "model"
+
+
+def test_moe_mode_selection():
+    assert make_rules(get_config("deepseek-v2-236b"), 16,
+                      ("data",))["expert"] == "model"      # EP: 160/16
+    g = make_rules(get_config("grok-1-314b"), 16, ("data",))
+    assert g["expert"] is None and g["expert_ff"] == "model"  # TP fallback

@@ -1,0 +1,62 @@
+"""Case-study simulators: memsys correctness + smart/naive agreement,
+Onira CPI accuracy vs analytic pipeline model, TrioSim vs closed form."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.sims.memsys import build, finish_stats
+from repro.sims.onira import (analytic_cpi, run_microbenches, run_mlp_sweep)
+from repro.sims.opgraph import analytic_step_us
+from repro.sims.triosim import simulate_step
+
+
+@pytest.mark.parametrize("pattern", ["mixed", "idle_half", "stream"])
+def test_memsys_completes_and_matches_naive(pattern):
+    sim_s, st_s = build(n_cores=8, pattern=pattern, n_reqs=24)
+    out_s = sim_s.run(st_s, until=20000.0)
+    s = finish_stats(sim_s, out_s)
+    assert s["remaining"] == 0 and s["outstanding"] == 0
+    sim_n, st_n = build(n_cores=8, pattern=pattern, n_reqs=24, naive=True)
+    out_n = sim_n.run(st_n, until=float(np.ceil(s["virtual_time"])) + 2)
+    n = finish_stats(sim_n, out_n)
+    for k in ("reads_done", "hits", "misses", "delivered", "remaining"):
+        assert s[k] == n[k], (k, s[k], n[k])
+    # Smart Ticking must skip most component ticks (the paper's win)
+    assert s["ticks"] < 0.2 * n["ticks"]
+    assert s["epochs"] < n["epochs"]
+
+
+def test_memsys_cache_hits_on_sequential_stream():
+    sim, st = build(n_cores=4, pattern="stream", n_reqs=64)
+    out = sim.run(st, until=50000.0)
+    s = finish_stats(sim, out)
+    # 64B lines, +64 stride => every line new: all misses is also fine for
+    # stride 64; hits come from the LCG pattern reuse — just check counts add
+    assert s["hits"] + s["misses"] == 64 * 4
+
+
+def test_onira_cpi_within_paper_band():
+    res = run_microbenches()
+    for name, r in res.items():
+        assert r["done"], name
+        ref = analytic_cpi(name)
+        err = abs(r["cpi"] - ref) / ref
+        assert err < 0.20, (name, r["cpi"], ref)   # paper: 10-20%
+
+
+def test_onira_mlp_saturates():
+    mlp = run_mlp_sweep(n_values=(1, 4, 16))
+    assert mlp[1] > mlp[4] > mlp[16] - 1e-6
+    assert mlp[16] < 2.0
+
+
+@pytest.mark.parametrize("plan", [(2, 1, 1), (1, 2, 1), (1, 1, 2)])
+def test_triosim_matches_analytic(plan):
+    dp, tp, pp = plan
+    cfg = dataclasses.replace(get_config("stablelm-1.6b"), n_layers=8)
+    r = simulate_step(cfg, batch=4, seq=512, dp=dp, tp=tp, pp=pp, micro=2)
+    a = analytic_step_us(cfg, 4, 512, dp, tp, pp, 2)
+    assert r["done"]
+    assert 0.9 < r["step_us"] / a < 1.15, (plan, r["step_us"], a)

@@ -1,0 +1,130 @@
+"""First-party component library tests: write policies, TLB/MMU chain,
+banked DRAM row-buffer accounting, and the paper's Fig-6 backtrace panic."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ComponentKind, SimBuilder, TickResult, msg_new, payload
+from repro.core.tracing import TracingDomain
+from repro.sims.components import (LINE, PAGE, READ_REQ, READ_RESP,
+                                   WRITE_ACK, WRITE_REQ, make_cache_kind,
+                                   make_dram_kind)
+from repro.sims.xlat import PageFault, run_translation_study
+
+
+def _driver_kind(ops):
+    """Issues a scripted list of (op, addr) one at a time, waits for each
+    response/ack."""
+    ops = np.asarray(ops, np.int32)
+
+    def tick(state, ports, t):
+        state = dict(state)
+        msg, got, ports = ports.recv(0)
+        state["waiting"] = jnp.where(got, 0, state["waiting"])
+        state["acks"] = state["acks"] + got.astype(jnp.int32)
+        idx = state["idx"]
+        want = (state["waiting"] == 0) & (idx < ops.shape[0])
+        row = state["ops"][jnp.clip(idx, 0, ops.shape[0] - 1)]
+        ports, sent = ports.send(0, msg_new(row[0], p0=row[1], p1=idx),
+                                 when=want)
+        state["idx"] = state["idx"] + sent.astype(jnp.int32)
+        state["waiting"] = jnp.where(sent, 1, state["waiting"])
+        return state, ports, TickResult.make(got | sent)
+
+    return ComponentKind("driver", tick, 1, 1, {
+        "ops": jnp.asarray(ops)[None, :, :],
+        "idx": jnp.zeros(1, jnp.int32),
+        "waiting": jnp.zeros(1, jnp.int32),
+        "acks": jnp.zeros(1, jnp.int32)}, cap=2)
+
+
+def _mem_kind():
+    def tick(state, ports, t):
+        msg, got, ports = ports.recv(0, when=ports.can_send(0))
+        is_read = got & (msg[0] == READ_REQ)
+        ports, _ = ports.send(
+            0, msg_new(READ_RESP, p0=payload(msg, 0), p1=payload(msg, 1)),
+            when=is_read)
+        state = {"reads": state["reads"] + is_read.astype(jnp.int32),
+                 "writes": state["writes"] +
+                 (got & (msg[0] == WRITE_REQ)).astype(jnp.int32)}
+        return state, ports, TickResult.make(got)
+
+    return ComponentKind("mem", tick, 1, 1,
+                         {"reads": jnp.zeros(1, jnp.int32),
+                          "writes": jnp.zeros(1, jnp.int32)}, cap=4)
+
+
+def _run_cache(ops, write_back):
+    b = SimBuilder()
+    drv = b.add_kind(_driver_kind(ops))
+    cache = b.add_kind(make_cache_kind("c", 1, n_sets=16,
+                                       write_back=write_back))
+    mem = b.add_kind(_mem_kind())
+    b.connect([drv.port(0, 0), cache.port(0, 0)], latency=1.0)
+    b.connect([cache.port(0, 1), mem.port(0, 0)], latency=4.0)
+    sim = b.build()
+    out = sim.run(sim.init_state(), until=5000.0)
+    return out.comp_state
+
+
+def test_write_through_forwards_every_write():
+    A = 0x100
+    ops = [(READ_REQ, A), (WRITE_REQ, A), (WRITE_REQ, A), (READ_REQ, A)]
+    cs = _run_cache(ops, write_back=False)
+    assert int(cs["driver"]["acks"][0]) == 4
+    assert int(cs["mem"]["writes"][0]) == 2          # both writes forwarded
+    assert int(cs["c"]["hits"][0]) == 3              # everything after fill
+
+
+def test_write_back_holds_dirty_lines():
+    A = 0x100
+    ops = [(READ_REQ, A), (WRITE_REQ, A), (WRITE_REQ, A), (READ_REQ, A)]
+    cs = _run_cache(ops, write_back=True)
+    assert int(cs["driver"]["acks"][0]) == 4
+    assert int(cs["mem"]["writes"][0]) == 0          # dirty, not written out
+    assert int(cs["c"]["hits"][0]) == 3
+
+
+def test_write_back_evicts_dirty_victim():
+    A = 0x100
+    B_ = A + 16 * LINE                                # same set, new tag
+    ops = [(READ_REQ, A), (WRITE_REQ, A), (READ_REQ, B_)]
+    cs = _run_cache(ops, write_back=True)
+    assert int(cs["driver"]["acks"][0]) == 3
+    assert int(cs["mem"]["writes"][0]) == 1          # victim written back
+
+
+def test_tlb_mmu_chain_counts():
+    # two pages, revisited: L1 cold-misses twice then hits
+    addrs = [0 * PAGE + 8, 1 * PAGE + 8, 0 * PAGE + 64, 1 * PAGE + 64,
+             0 * PAGE + 128]
+    stats = run_translation_study(addrs)
+    assert stats["translated"] == 5
+    assert stats["l1_misses"] == 2 and stats["walks"] == 2
+    assert stats["l1_hits"] == 3
+    assert stats["l2_misses"] == 2
+
+
+def test_page_fault_enhanced_backtrace(capsys):
+    addrs = [0 * PAGE + 8, (1 << 12) * PAGE]          # second page unmapped
+    with pytest.raises(PageFault):
+        run_translation_study(addrs, max_vpn=1 << 10)
+    out = capsys.readouterr().out
+    # the paper's Fig-6b cause chain, root -> leaf
+    for frag in ("@Core0, instruction, load", "@L1TLB[0], translation",
+                 "@L2TLB, translation", "@MMU, page-walk"):
+        assert frag in out, out
+
+
+def test_dram_row_buffer_hits():
+    same_row = [(READ_REQ, 64 * i) for i in range(4)]          # one row
+    b = SimBuilder()
+    drv = b.add_kind(_driver_kind(same_row))
+    dram = b.add_kind(make_dram_kind("dram", 1, n_banks=1, row_bits=11))
+    b.connect([drv.port(0, 0), dram.port(0, 0)], latency=2.0)
+    sim = b.build()
+    out = sim.run(sim.init_state(), until=2000.0)
+    cs = out.comp_state
+    assert int(cs["dram"]["served"][0]) == 4
+    assert int(cs["dram"]["row_hits"][0]) == 3        # first opens the row
