@@ -9,6 +9,7 @@ N× more cores costs far less than N× more wall time.  The cross-device half
 subprocess tests and the 512-chip dry-run."""
 import time
 
+import jax
 import numpy as np
 
 from repro.sims.memsys import build, finish_stats
@@ -19,10 +20,11 @@ def _wall(n_cores, pattern="mixed", n_reqs=64):
     # would conflate queueing with engine overhead)
     sim, st = build(n_cores=n_cores, pattern=pattern, n_reqs=n_reqs,
                     private_dram=True)
-    out = sim.run(st, until=100000.0)
+    out = sim.run(sim.copy_state(st), until=100000.0)
     out.time.block_until_ready()
+    st2 = jax.block_until_ready(sim.copy_state(st))  # run() consumes st2
     t0 = time.perf_counter()
-    out = sim.run(st, until=100000.0)
+    out = sim.run(st2, until=100000.0)
     out.time.block_until_ready()
     return time.perf_counter() - t0, finish_stats(sim, out)
 

@@ -14,6 +14,7 @@ they are analysis artifacts, not wall-time benchmarks.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -21,6 +22,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset of benchmark module names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write per-benchmark results (us_per_call + "
+                         "derived metrics) as JSON, e.g. BENCH_engine.json, "
+                         "so future PRs have a perf trajectory to compare")
     args = ap.parse_args()
 
     from . import (kernels, onira_cpi, parallel_sim, pdes_scaling,
@@ -39,15 +44,23 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    results: dict[str, dict] = {}
     for name, mod in modules.items():
         try:
             for row in mod.bench():
                 print(f"{row['name']},{row['us_per_call']:.1f},"
                       f"\"{row['derived']}\"")
                 sys.stdout.flush()
+                results[row["name"]] = {
+                    k: v for k, v in row.items() if k != "name"}
         except Exception as e:  # keep the harness going, report at exit
             failures += 1
             print(f"{name},ERROR,\"{e!r}\"")
+            results[name] = {"error": repr(e)}
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(results, fh, indent=2, sort_keys=True)
+            fh.write("\n")
     if failures:
         raise SystemExit(1)
 

@@ -8,6 +8,7 @@ import os
 import tempfile
 import time
 
+import jax
 import numpy as np
 
 from repro.core.monitor import Monitor
@@ -23,9 +24,10 @@ def _horizon(n_cores, n_reqs):
 
 def _run_plain(n_cores, n_reqs, horizon):
     sim, st = build(n_cores=n_cores, pattern="mixed", n_reqs=n_reqs)
-    sim.run(st, until=horizon).time.block_until_ready()
+    sim.run(sim.copy_state(st), until=horizon).time.block_until_ready()
+    st2 = jax.block_until_ready(sim.copy_state(st))
     t0 = time.perf_counter()
-    sim.run(st, until=horizon).time.block_until_ready()
+    sim.run(st2, until=horizon).time.block_until_ready()
     return time.perf_counter() - t0
 
 
@@ -37,7 +39,7 @@ def _run_traced(n_cores, n_reqs, horizon):
                     sample_period=64.0)
 
     def once():
-        mon = Monitor(sim, st)
+        mon = Monitor(sim, sim.copy_state(st))
         final, _ = mon.run_monitored(until=horizon, chunk=horizon / 8,
                                      verbose=False)
         with tempfile.TemporaryDirectory() as d:

@@ -28,6 +28,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @jax.tree_util.register_dataclass
@@ -64,8 +65,13 @@ class ComponentKind:
     cap: int | Any = 4                   # scalar, [P], or [N, P] buffer capacity
     start_asleep: bool = False           # if True, wait for a message to start
 
+    @property
+    def n_ports_total(self) -> int:
+        """Size of this kind's port-state segment (``n_instances*n_ports``,
+        instance-major) — see the engine's segmented ``SimState`` layout."""
+        return self.n_instances * self.n_ports
+
     def periods(self):
-        import numpy as np
         p = np.asarray(self.period, np.float32)
         if p.ndim == 0:
             p = np.full((self.n_instances,), float(p), np.float32)
@@ -73,7 +79,6 @@ class ComponentKind:
         return p
 
     def caps(self):
-        import numpy as np
         c = np.asarray(self.cap, np.int32)
         if c.ndim == 0:
             c = np.full((self.n_instances, self.n_ports), int(c), np.int32)

@@ -23,6 +23,35 @@ Design (see DESIGN.md §3 for the hardware-adaptation rationale):
   Fig. 9a/9b reproduction.  Both engines share the delivery/tick code, so the
   hypothesis equivalence test can require *bit-identical* results.
 
+Hot-loop performance architecture (see ENGINE_PERF.md):
+
+* **Segmented port state** — port ring buffers live in per-kind segments
+  (``SimState.in_buf`` etc. are dicts keyed by kind name, mirroring
+  ``comp_state``), so a kind's tick phase reads and writes *only its own
+  segment*; the old layout needed a gather plus a full-array scatter per
+  port array per kind per epoch.  ``_deliver`` materializes flat views
+  lazily (concats of these small arrays are ~free) and is *scatter-free*:
+  on CPU XLA a scatter costs two orders of magnitude more than the
+  equivalent static-index take or one-hot select at these array sizes, so
+  every dynamically-indexed update is reformulated as static takes
+  (connection membership is a build-time constant) plus one-hot
+  multiply/reduce over the destination-port axis.
+* **Super-epoch fusion** — ``_run`` executes ``super_epoch`` (K) epochs per
+  ``while_loop`` iteration via an inner ``lax.scan`` whose steps are guarded
+  by ``lax.cond``: steps past the horizon are exact no-ops, so fused runs
+  are bit-identical to K=1 runs while amortizing loop-condition evaluation
+  and letting XLA fuse across epochs.  K is picked heuristically from the
+  topology size and exposed as the ``super_epoch`` build knob (K=1 is the
+  compatibility path).
+* **Zero-copy stepping** — ``run()`` donates the ``SimState`` into the jitted
+  loop (``donate_argnums``) so the big message buffers are updated in place
+  instead of round-tripped; a donated input state must not be reused by the
+  caller (use :meth:`Simulation.copy_state` first, or build with
+  ``donate=False``).
+* **Hoisted constants** — per-kind static index arrays (port slices, global
+  port ids, capacity/period/peer slices, connection-membership masks) are
+  precomputed once at build time instead of re-derived every epoch.
+
 Parallelism is transparent exactly as the paper demands: ``tick_fn`` is
 single-instance, lock-free code; the engine vmaps it over instances (VPU
 lanes) and `repro.core.pdes` shards the instance axis over devices.
@@ -64,28 +93,53 @@ class Stats:
 
     @staticmethod
     def zero(n_comp):
-        z = jnp.zeros((), jnp.int32)
-        return Stats(z, z, z, z, jnp.zeros((n_comp,), jnp.int32))
+        # distinct buffers per field: aliased leaves cannot be donated
+        z = lambda: jnp.zeros((), jnp.int32)
+        return Stats(z(), z(), z(), z(), jnp.zeros((n_comp,), jnp.int32))
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SimState:
+    """Engine state.  Port arrays are *per-kind segments*: dicts keyed by
+    kind name whose values are flat over that kind's ports
+    (``[N_k * P_k, ...]``, instance-major).  Flat global views (ordered by
+    kind registration, i.e. global port id) are materialized on demand via
+    ``Simulation.flat_in_cnt`` and friends."""
+
     time: jax.Array            # f32 scalar — virtual time in cycles
     next_tick: jax.Array       # [NC] f32 — per-component wake time (+inf asleep)
     conn_wake: jax.Array       # [C] f32 — per-connection wake time
     comp_state: dict           # kind name -> pytree with leading [N_k]
-    in_buf: jax.Array          # [PG, CAP, W] i32
-    in_head: jax.Array         # [PG] i32
-    in_cnt: jax.Array          # [PG] i32
-    out_buf: jax.Array         # [PG, CAP, W] i32
-    out_head: jax.Array        # [PG] i32
-    out_cnt: jax.Array         # [PG] i32
+    in_buf: dict               # kind name -> [NP_k, CAP, W] i32
+    in_head: dict              # kind name -> [NP_k] i32
+    in_cnt: dict               # kind name -> [NP_k] i32
+    out_buf: dict              # kind name -> [NP_k, CAP, W] i32
+    out_head: dict             # kind name -> [NP_k] i32
+    out_cnt: dict              # kind name -> [NP_k] i32
     rr: jax.Array              # [C] i32 — round-robin pointers
     stats: Stats
     buf_samples: jax.Array     # [S, PG] i32 in-buffer levels (0-size if off)
     sample_idx: jax.Array      # i32
     next_sample: jax.Array     # f32
+
+
+@dataclasses.dataclass
+class _KindConsts:
+    """Per-kind constants hoisted out of the hot loop at build time."""
+
+    name: str
+    n: int                     # instances
+    p: int                     # ports per instance
+    np_k: int                  # n * p
+    cb: int                    # component base id
+    pb: int                    # global port base id
+    csl: slice                 # global component slice
+    periods: jax.Array         # [n] f32
+    caps: jax.Array            # [n, p] i32
+    caps_f: jax.Array          # [n*p] i32
+    gid: jax.Array             # [n, p] i32 global port ids
+    peer: jax.Array            # [n, p] i32 default peers
 
 
 class SimBuilder:
@@ -117,19 +171,31 @@ class SimBuilder:
     # ------------------------------------------------------------------
     def build(self, naive: bool = False, cap_phys: int | None = None,
               sample_period: float = 0.0, max_samples: int = 1024,
+              super_epoch: int | None = None, donate: bool = True,
               ) -> "Simulation":
+        """Compile the topology.
+
+        ``super_epoch`` — epochs fused per ``while_loop`` iteration (None =
+        heuristic from topology size, 1 = unfused compatibility path).
+        ``donate`` — donate ``SimState`` into the jitted run so buffers are
+        updated in place; callers must then treat the state passed to
+        ``run()`` as consumed (see ENGINE_PERF.md).
+        """
         return Simulation(self, naive=naive, cap_phys=cap_phys,
                           sample_period=sample_period,
-                          max_samples=max_samples)
+                          max_samples=max_samples,
+                          super_epoch=super_epoch, donate=donate)
 
 
 class Simulation:
     """A compiled-topology simulation instance."""
 
     def __init__(self, b: SimBuilder, naive: bool, cap_phys: int | None,
-                 sample_period: float, max_samples: int):
+                 sample_period: float, max_samples: int,
+                 super_epoch: int | None = None, donate: bool = True):
         self.kinds = list(b.kinds)
         self.naive = naive
+        self.donate = donate
         self.sample_period = float(sample_period)
         self.max_samples = int(max_samples) if sample_period > 0 else 0
 
@@ -140,8 +206,16 @@ class Simulation:
             self.comp_base.append(nc)
             self.port_base.append(pg)
             nc += k.n_instances
-            pg += k.n_instances * k.n_ports
+            pg += k.n_ports_total
         self.n_comp, self.n_ports_g = nc, pg
+
+        if super_epoch is None:
+            # Measured on CPU XLA (ENGINE_PERF.md): with the scatter-free
+            # epoch body the loop boundary is cheap, so modest fusion is
+            # enough; large topologies pay more per masked tail step and
+            # per unrolled-copy compile time, so they stay unfused.
+            super_epoch = 2 if pg <= 4096 else 1
+        self.super_epoch = max(1, int(super_epoch))
 
         periods = np.concatenate([k.periods() for k in self.kinds]) \
             if self.kinds else np.zeros((0,), np.float32)
@@ -180,14 +254,71 @@ class Simulation:
                 peer[pids[0]], peer[pids[1]] = pids[1], pids[0]
         self.n_conn, self.max_m = n_conn, max_m
 
-        # --- constants on device -----------------------------------------
+        # --- constants on device (only entries the hot loop / pdes still
+        # read; member/latency/periods/port_owner live on as the hoisted
+        # static copies below — edit those, not this dict) ----------------
         self.c = dict(
-            periods=jnp.asarray(periods), caps=jnp.asarray(caps),
-            port_owner=jnp.asarray(port_owner), member=jnp.asarray(member),
-            latency=jnp.asarray(latency), port_conn=jnp.asarray(port_conn),
+            caps=jnp.asarray(caps), port_conn=jnp.asarray(port_conn),
             peer=jnp.asarray(peer),
         )
-        self._run_jit = jax.jit(self._run, static_argnames=("max_epochs",))
+        self._periods_np, self._caps_np = periods, caps
+        # --- hoisted delivery constants (scatter-free formulation) -------
+        # slot_of_port: inverse of the member matrix — each port is served
+        # by at most one connection slot, so winner pops become static takes.
+        CM = n_conn * max_m
+        slot = np.full((pg + 1,), CM, np.int32)
+        flat_m = member.reshape(-1)
+        for sl_ix, g in enumerate(flat_m):
+            if g >= 0:
+                slot[g] = sl_ix
+        self._slot_of_port = slot[:pg]
+        self._mps_np = np.maximum(member, 0)
+        self._valid_np = member >= 0
+        self._mps_j = jnp.asarray(self._mps_np)
+        # member matrix with invalid slots pointing past the wake-mask pad
+        self._member_sent_np = np.where(member >= 0, member, pg)
+        self._lat_f = jnp.asarray(np.repeat(latency, max_m))      # [C*M]
+        self._port_period = jnp.asarray(
+            periods[port_owner] if pg else np.zeros((0,), np.float32))
+        self._apg = np.arange(pg, dtype=np.int32)                 # [PG]
+        self._acap = np.arange(self.cap_phys, dtype=np.int32)     # [CAP]
+        self._am = np.arange(max_m, dtype=np.int32)               # [M]
+        self._acm = np.arange(CM, dtype=np.int32)                 # [C*M]
+        self._build_kind_consts()
+        self._jit_kwargs: dict[str, Any] = dict(
+            static_argnames=("max_epochs",))
+        if donate:
+            self._jit_kwargs["donate_argnums"] = (0,)
+        self._run_jit = jax.jit(self._run, **self._jit_kwargs)
+
+    # ------------------------------------------------------------------
+    def _build_kind_consts(self):
+        """Hoist per-kind static index/constant arrays out of the hot loop."""
+        self._kc = []
+        peer = np.asarray(self.c["peer"])
+        for ki, k in enumerate(self.kinds):
+            n, p = k.n_instances, k.n_ports
+            np_k = n * p
+            cb, pb = self.comp_base[ki], self.port_base[ki]
+            self._kc.append(_KindConsts(
+                name=k.name, n=n, p=p, np_k=np_k, cb=cb, pb=pb,
+                csl=slice(cb, cb + n),
+                periods=jnp.asarray(self._periods_np[cb:cb + n]),
+                caps=jnp.asarray(self._caps_np[pb:pb + np_k].reshape(n, p)),
+                caps_f=jnp.asarray(self._caps_np[pb:pb + np_k]),
+                gid=jnp.arange(pb, pb + np_k, dtype=jnp.int32).reshape(n, p),
+                peer=jnp.asarray(peer[pb:pb + np_k].reshape(n, p))))
+
+    def set_default_peers(self, mapping: dict[int, int]):
+        """Rewrite default peers (global port id -> peer port id) and refresh
+        the hoisted per-kind constants.  Safe at any time: the jitted run is
+        re-wrapped so traces that baked the old constants are discarded."""
+        peer = np.asarray(self.c["peer"]).copy()
+        for src, dst in mapping.items():
+            peer[src] = dst
+        self.c["peer"] = jnp.asarray(peer)
+        self._build_kind_consts()
+        self._run_jit = jax.jit(self._run, **self._jit_kwargs)
 
     # ------------------------------------------------------------------
     def port_id(self, kind_name: str, inst: int, port: int = 0) -> int:
@@ -205,83 +336,149 @@ class Simulation:
         raise KeyError(kind_name)
 
     # ------------------------------------------------------------------
+    def _flat(self, seg: dict) -> jax.Array:
+        """Flat global view (ordered by kind => global port id) of a
+        per-kind segment dict."""
+        parts = [seg[k.name] for k in self.kinds]
+        if not parts:
+            return jnp.zeros((0,), jnp.int32)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    def flat_in_cnt(self, s: SimState) -> jax.Array:
+        return self._flat(s.in_cnt)
+
+    def flat_out_cnt(self, s: SimState) -> jax.Array:
+        return self._flat(s.out_cnt)
+
+    def copy_state(self, s: SimState) -> SimState:
+        """Deep-copy a state so the original survives a donating ``run()``."""
+        return jax.tree.map(jnp.copy, s)
+
+    # ------------------------------------------------------------------
     def init_state(self) -> SimState:
-        pgt, cap, w = self.n_ports_g, self.cap_phys, MSG_WORDS
+        cap, w = self.cap_phys, MSG_WORDS
         next_tick = []
         for k in self.kinds:
             t0 = INF if k.start_asleep else 0.0
             next_tick.append(jnp.full((k.n_instances,), t0, jnp.float32))
+        seg = lambda shape_fn: {kc.name: shape_fn(kc) for kc in self._kc}
+        zeros_np = lambda kc: jnp.zeros((kc.np_k,), jnp.int32)
+        zeros_buf = lambda kc: jnp.zeros((kc.np_k, cap, w), jnp.int32)
+        # copy user-supplied init pytrees: donation must never delete (or
+        # double-donate aliases of) the builder's arrays
+        comp_state = jax.tree.map(
+            jnp.copy, {k.name: k.init_state for k in self.kinds})
         return SimState(
             time=jnp.float32(0.0),
             next_tick=(jnp.concatenate(next_tick) if next_tick
                        else jnp.zeros((0,), jnp.float32)),
             conn_wake=jnp.full((self.n_conn,), INF),
-            comp_state={k.name: k.init_state for k in self.kinds},
-            in_buf=jnp.zeros((pgt, cap, w), jnp.int32),
-            in_head=jnp.zeros((pgt,), jnp.int32),
-            in_cnt=jnp.zeros((pgt,), jnp.int32),
-            out_buf=jnp.zeros((pgt, cap, w), jnp.int32),
-            out_head=jnp.zeros((pgt,), jnp.int32),
-            out_cnt=jnp.zeros((pgt,), jnp.int32),
+            comp_state=comp_state,
+            in_buf=seg(zeros_buf), in_head=seg(zeros_np), in_cnt=seg(zeros_np),
+            out_buf=seg(zeros_buf), out_head=seg(zeros_np),
+            out_cnt=seg(zeros_np),
             rr=jnp.zeros((self.n_conn,), jnp.int32),
             stats=Stats.zero(self.n_comp),
             # min 1 row: zero-sized arrays break shard_map sharding (pdes)
-            buf_samples=jnp.zeros((max(self.max_samples, 1), pgt), jnp.int32),
+            buf_samples=jnp.zeros((max(self.max_samples, 1), self.n_ports_g),
+                                  jnp.int32),
             sample_idx=jnp.int32(0),
             next_sample=jnp.float32(self.sample_period if self.sample_period
                                     else jnp.inf),
         )
 
+    def _port_min_to_comp(self, wake_port):
+        """Per-port wake times [PG] -> per-component wake times [NC] by a
+        min over each component's (contiguous) ports — static reshapes, no
+        scatter."""
+        if not self.kinds:
+            return jnp.zeros((0,), jnp.float32)
+        parts = [
+            jnp.min(wake_port[kc.pb:kc.pb + kc.np_k].reshape(kc.n, kc.p),
+                    axis=1)
+            for kc in self._kc]
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
     # ------------------------------------------------------------------
     # Delivery phase: round-robin arbitrated crossbar per connection.
-    def _deliver(self, s: SimState, t, active, wake_comp):
+    #
+    # Scatter-free: on CPU XLA a scatter costs two orders of magnitude more
+    # than the equivalent take/one-hot arithmetic at these array sizes.
+    # Connection membership is static, so source-side pops are static takes
+    # through ``slot_of_port``; destination-side state is computed *per
+    # port* — round-robin arbitration admits at most one winner per
+    # destination port per connection, so a [C*M, PG] one-hot reduces
+    # exactly to each port's winning slot, and pushes become masked selects
+    # on each kind's segment.  A message's dst must be a port of its
+    # serving connection (the crossbar contract; arbitration cannot see
+    # across connections — the previous scatter formulation corrupted
+    # cross-connection collisions just the same, via double in_cnt adds).
+    def _deliver(self, s: SimState, t, active, wake1):
+        if not self.kinds:
+            return s, jnp.zeros((0,), jnp.float32)
         c = self.c
-        C, M = self.n_conn, self.max_m
-        mp = c["member"]                       # [C, M]
-        valid = mp >= 0
-        mps = jnp.maximum(mp, 0)
-        have = (s.out_cnt[mps] > 0) & valid & active[:, None]
-        head = s.out_buf[mps, s.out_head[mps]]           # [C, M, W]
+        C, M, PG = self.n_conn, self.max_m, self.n_ports_g
+        CM = C * M
+        mps, valid = self._mps_np, jnp.asarray(self._valid_np)   # [C, M]
+        # flat views of the per-port arrays (cheap concats at these sizes)
+        in_head_f, in_cnt_f = self._flat(s.in_head), self._flat(s.in_cnt)
+        out_head_f, out_cnt_f = self._flat(s.out_head), self._flat(s.out_cnt)
+        out_buf_f = self._flat(s.out_buf)
+
+        have = (out_cnt_f[mps] > 0) & valid & active[:, None]
+        head_ix = out_head_f[mps]                        # [C, M]
+        head = out_buf_f[self._mps_j, head_ix]           # [C, M, W]
         dst = head[:, :, W_DST]
-        dsts = jnp.clip(dst, 0, self.n_ports_g - 1)
-        space = s.in_cnt[dsts] < c["caps"][dsts]
+        dsts = jnp.clip(dst, 0, PG - 1)
+        OH0 = dsts.reshape(CM)[:, None] == self._apg     # [CM, PG] one-hot
+        space_port = in_cnt_f < c["caps"]                # [PG]
+        space = jnp.any(OH0 & space_port[None, :], axis=1).reshape(C, M)
         req = have & space & (dst >= 0)
-        prio = (jnp.arange(M, dtype=jnp.int32)[None, :] - s.rr[:, None]) % M
+        prio = (self._am[None, :] - s.rr[:, None]) % M
         # m loses if some m2 requests the same destination with lower prio.
         beats = (req[:, None, :] & (dst[:, :, None] == dst[:, None, :])
                  & (prio[:, None, :] < prio[:, :, None]))
         win = req & ~jnp.any(beats, axis=2)              # [C, M]
+        win_f = win.reshape(CM)
+        OHwin = OH0 & win_f[:, None]                     # [CM, PG]
 
-        win_f = win.reshape(-1)
-        drop_p = jnp.int32(self.n_ports_g)               # out-of-bounds => drop
-        src_f = jnp.where(win_f, mps.reshape(-1), drop_p)
-        dst_f = jnp.where(win_f, dsts.reshape(-1), drop_p)
-        lat_f = jnp.repeat(c["latency"], M)
-        arrive = t + lat_f
-        msg_f = head.reshape(-1, MSG_WORDS).at[:, W_TIME].set(f2i(arrive))
+        # per destination port: did it receive, and from which member slot
+        got = jnp.any(OHwin, axis=0)                     # [PG]
+        wslot = jnp.sum(OHwin * self._acm[:, None], axis=0)       # [PG]
+        arrive = t + self._lat_f                         # [CM]
+        msg_f = head.reshape(CM, MSG_WORDS).at[:, W_TIME].set(f2i(arrive))
+        msg_port = msg_f[wslot]                          # [PG, W]
+        arr_port = jnp.where(got, arrive[wslot], INF)    # [PG]
+        t_port = (in_head_f + in_cnt_f) % self.cap_phys
+        capOH = (t_port[:, None] == self._acap) & got[:, None]    # [PG, CAP]
+        goti = got.astype(jnp.int32)
 
-        full_before_out = s.out_cnt == c["caps"]
-        # pop winners from source out-buffers
-        out_cnt = s.out_cnt.at[src_f].add(-1, mode="drop")
-        out_head = s.out_head.at[src_f].add(1, mode="drop") % self.cap_phys
-        # push into destination in-buffers
-        tail_f = (s.in_head[dst_f % self.n_ports_g]
-                  + s.in_cnt[dst_f % self.n_ports_g]) % self.cap_phys
-        in_buf = s.in_buf.at[dst_f, tail_f].set(msg_f, mode="drop")
-        in_cnt = s.in_cnt.at[dst_f].add(1, mode="drop")
+        # source-side pops: static take (each port has one member slot)
+        win_pad = jnp.concatenate([win_f, jnp.zeros((1,), bool)])
+        dec = win_pad[self._slot_of_port].astype(jnp.int32)       # [PG]
+        full_before_out = out_cnt_f == c["caps"]
 
-        # Rule 1: message arrival wakes the destination component.
-        drop_c = jnp.int32(self.n_comp)
-        own_dst = jnp.where(win_f, c["port_owner"][dst_f % self.n_ports_g], drop_c)
-        per_dst = c["periods"][own_dst % max(self.n_comp, 1)]
-        wake_comp = wake_comp.at[own_dst].min(
-            _align_at_or_after(arrive, per_dst), mode="drop")
-        # Rule 2 / backprop forward half: freed source out-buffer wakes owner.
-        freed = win_f & full_before_out[src_f % self.n_ports_g]
-        own_src = jnp.where(freed, c["port_owner"][src_f % self.n_ports_g], drop_c)
-        per_src = c["periods"][own_src % max(self.n_comp, 1)]
-        wake_comp = wake_comp.at[own_src].min(
-            _align_after(t, per_src), mode="drop")
+        # Rule 1: arrival wakes the destination; rule 2 / backprop forward
+        # half: freed source out-buffer wakes its owner.  Both computed per
+        # port, then min-reduced onto components (ports are owner-major).
+        freed_port = (dec > 0) & full_before_out
+        wake_port = jnp.minimum(
+            _align_at_or_after(arr_port, self._port_period),
+            jnp.where(freed_port, _align_after(t, self._port_period), INF))
+        wake_comp = self._port_min_to_comp(wake_port)
+
+        # per-kind segment updates (pure where/add on each segment slice)
+        out_cnt_seg, out_head_seg = dict(s.out_cnt), dict(s.out_head)
+        in_buf_seg, in_cnt_seg = dict(s.in_buf), dict(s.in_cnt)
+        for kc in self._kc:
+            sl = slice(kc.pb, kc.pb + kc.np_k)
+            out_cnt_seg[kc.name] = s.out_cnt[kc.name] - dec[sl]
+            out_head_seg[kc.name] = (s.out_head[kc.name]
+                                     + dec[sl]) % self.cap_phys
+            in_cnt_seg[kc.name] = s.in_cnt[kc.name] + goti[sl]
+            in_buf_seg[kc.name] = jnp.where(
+                capOH[sl][:, :, None], msg_port[sl][:, None, :],
+                s.in_buf[kc.name])
 
         # round-robin pointer: advance past the last-served winner
         gp = jnp.where(win, prio, -1)
@@ -291,66 +488,65 @@ class Simulation:
 
         # connection self-scheduling: if it delivered and work remains, wake
         # next cycle; otherwise sleep (backprop / sends will wake it).
-        pending = jnp.any(valid & (out_cnt[mps] > 0), axis=1)
-        nw = jnp.where(any_win & pending, _align_after(t, 1.0), INF)
+        out_cnt_f2 = out_cnt_f - dec
+        pending = jnp.any(valid & (out_cnt_f2[mps] > 0), axis=1)
+        nw = jnp.where(any_win & pending, wake1, INF)
         conn_wake = jnp.where(active, nw, s.conn_wake)
 
         delivered = jnp.sum(win_f.astype(jnp.int32))
         s = dataclasses.replace(
-            s, in_buf=in_buf, in_cnt=in_cnt, out_buf=s.out_buf,
-            out_cnt=out_cnt, out_head=out_head, rr=rr, conn_wake=conn_wake,
+            s, in_buf=in_buf_seg, in_cnt=in_cnt_seg,
+            out_cnt=out_cnt_seg, out_head=out_head_seg, rr=rr,
+            conn_wake=conn_wake,
             stats=dataclasses.replace(s.stats,
                                       delivered=s.stats.delivered + delivered))
         return s, wake_comp
 
     # ------------------------------------------------------------------
-    # Tick phase: vmap each kind's tick_fn over its to-run instances.
-    def _tick_kinds(self, s: SimState, t, wake_conn):
-        c = self.c
+    # Tick phase: vmap each kind's tick_fn over its instances; with the
+    # segmented layout each kind reads/writes only its own segment.
+    def _tick_kinds(self, s: SimState, t, wake1):
         next_tick = s.next_tick
-        in_buf, in_head, in_cnt = s.in_buf, s.in_head, s.in_cnt
-        out_buf, out_head, out_cnt = s.out_buf, s.out_head, s.out_cnt
         comp_state = dict(s.comp_state)
+        in_buf, in_head, in_cnt = dict(s.in_buf), dict(s.in_head), dict(s.in_cnt)
+        out_buf, out_head, out_cnt = (dict(s.out_buf), dict(s.out_head),
+                                      dict(s.out_cnt))
         total_ticks = jnp.int32(0)
         total_prog = jnp.int32(0)
         busy = s.stats.busy
+        tf = jnp.asarray(t, jnp.float32)
+        wake_p_segs = {}           # kind -> [n*p] bool: port wants its conn
 
         for ki, kind in enumerate(self.kinds):
-            n, p = kind.n_instances, kind.n_ports
-            cb, pb = self.comp_base[ki], self.port_base[ki]
-            csl = slice(cb, cb + n)
-            psl = slice(pb, pb + n * p)
+            kc = self._kc[ki]
+            n, p, name = kc.n, kc.p, kc.name
             if self.naive:
-                mask = jnp.abs(jnp.remainder(t, c["periods"][csl])) < EPS
-                mask = mask | (jnp.abs(jnp.remainder(t, c["periods"][csl])
-                                       - c["periods"][csl]) < EPS)
+                r = jnp.remainder(t, kc.periods)
+                mask = (jnp.abs(r) < EPS) | (jnp.abs(r - kc.periods) < EPS)
             else:
-                mask = next_tick[csl] <= t + EPS
+                mask = next_tick[kc.csl] <= t + EPS
 
-            sh = lambda a: a[psl].reshape(n, p, *a.shape[1:])
-            gid = jnp.arange(pb, pb + n * p, dtype=jnp.int32).reshape(n, p)
+            sh = lambda a: a.reshape(n, p, *a.shape[1:])
 
             def one(st_i, ib, ih, ic, ob, oh, oc, cp, g, pe, kind=kind):
-                ports = Ports(ib, ih, ic, ob, oh, oc, cp, g, pe,
-                              jnp.asarray(t, jnp.float32))
+                ports = Ports(ib, ih, ic, ob, oh, oc, cp, g, pe, tf)
                 st2, ports2, res = normalize_tick_output(
-                    kind.tick_fn(st_i, ports, jnp.asarray(t, jnp.float32)))
+                    kind.tick_fn(st_i, ports, tf))
                 return (st2, ports2.in_buf, ports2.in_head, ports2.in_cnt,
                         ports2.out_buf, ports2.out_head, ports2.out_cnt,
                         res.progress, res.next_time)
 
             (st2, ib2, ih2, ic2, ob2, oh2, oc2, prog, nxt) = jax.vmap(one)(
-                comp_state[kind.name], sh(in_buf), sh(in_head), sh(in_cnt),
-                sh(out_buf), sh(out_head), sh(out_cnt),
-                c["caps"][psl].reshape(n, p), gid,
-                c["peer"][psl].reshape(n, p))
+                comp_state[name], sh(in_buf[name]), sh(in_head[name]),
+                sh(in_cnt[name]), sh(out_buf[name]), sh(out_head[name]),
+                sh(out_cnt[name]), kc.caps, kc.gid, kc.peer)
 
             def sel(new, old, m=mask):
                 mm = m.reshape(m.shape + (1,) * (new.ndim - 1))
                 return jnp.where(mm, new, old)
 
-            comp_state[kind.name] = jax.tree.map(
-                lambda a, b: sel(a, b), st2, comp_state[kind.name])
+            comp_state[name] = jax.tree.map(
+                lambda a, b: sel(a, b), st2, comp_state[name])
             fl = lambda a: a.reshape(n * p, *a.shape[2:])
             pmask = jnp.repeat(mask, p)
 
@@ -358,52 +554,53 @@ class Simulation:
                 mm = pmask.reshape(pmask.shape + (1,) * (new.ndim - 1))
                 return jnp.where(mm, new, old)
 
-            ic_old = in_cnt[psl]
-            oc_old = out_cnt[psl]
-            in_buf = in_buf.at[psl].set(psel(fl(ib2), in_buf[psl]))
-            in_head = in_head.at[psl].set(psel(fl(ih2), in_head[psl]))
-            in_cnt = in_cnt.at[psl].set(psel(fl(ic2), in_cnt[psl]))
-            out_buf = out_buf.at[psl].set(psel(fl(ob2), out_buf[psl]))
-            out_head = out_head.at[psl].set(psel(fl(oh2), out_head[psl]))
-            out_cnt = out_cnt.at[psl].set(psel(fl(oc2), out_cnt[psl]))
+            ic_old, oc_old = in_cnt[name], out_cnt[name]
+            in_buf[name] = psel(fl(ib2), in_buf[name])
+            in_head[name] = psel(fl(ih2), in_head[name])
+            in_cnt[name] = psel(fl(ic2), in_cnt[name])
+            out_buf[name] = psel(fl(ob2), out_buf[name])
+            out_head[name] = psel(fl(oh2), out_head[name])
+            out_cnt[name] = psel(fl(oc2), out_cnt[name])
 
             prog = prog & mask
             if not self.naive:
                 # Rule 3: progress => next cycle; no progress => sleep.
-                base = jnp.where(prog, _align_after(t, c["periods"][csl]), INF)
+                base = jnp.where(prog, _align_after(t, kc.periods), INF)
                 custom = jnp.where(nxt > -0.5, jnp.maximum(nxt, t + EPS), base)
                 # In-flight arrivals: a ticked component must not sleep past
                 # the ready time of a message already in its buffers (rule 1
                 # for arrivals whose delivery preceded this tick).  Ready-now
                 # messages do NOT re-wake — unblocking is backprop's job.
-                hb = in_buf[psl][:, :, W_TIME]              # [n*p, CAP]
-                hr = i2f(jnp.take_along_axis(
-                    hb, in_head[psl][:, None], axis=1)[:, 0])
-                pend = (in_cnt[psl] > 0) & (hr > t + EPS)
+                hb = in_buf[name][:, :, W_TIME]             # [n*p, CAP]
+                hOH = in_head[name][:, None] == self._acap  # one-hot gather
+                hr = i2f(jnp.sum(hb * hOH.astype(jnp.int32), axis=1))
+                pend = (in_cnt[name] > 0) & (hr > t + EPS)
                 w = jnp.where(pend, hr, INF).reshape(n, p)
-                arr = _align_at_or_after(jnp.min(w, axis=1),
-                                         c["periods"][csl])
+                arr = _align_at_or_after(jnp.min(w, axis=1), kc.periods)
                 custom = jnp.minimum(custom, arr)
-                next_tick = next_tick.at[csl].set(
-                    jnp.where(mask, custom, next_tick[csl]))
+                next_tick = next_tick.at[kc.csl].set(
+                    jnp.where(mask, custom, next_tick[kc.csl]))
 
             # Availability Backpropagation (backward half): incoming buffer
             # full->not-full wakes the serving connection; any new send wakes
             # the connection too.
-            caps_p = c["caps"][psl]
-            ic_new, oc_new = in_cnt[psl], out_cnt[psl]
-            in_freed = (ic_old == caps_p) & (ic_new < caps_p)
-            sent = oc_new > oc_old
-            wake_p = in_freed | sent
-            drop_c = jnp.int32(self.n_conn)
-            conns = jnp.where(wake_p, c["port_conn"][psl], drop_c)
-            conns = jnp.where(conns < 0, drop_c, conns)
-            wake_conn = wake_conn.at[conns].min(_align_after(t, 1.0),
-                                                mode="drop")
+            ic_new, oc_new = in_cnt[name], out_cnt[name]
+            in_freed = (ic_old == kc.caps_f) & (ic_new < kc.caps_f)
+            wake_p_segs[name] = in_freed | (oc_new > oc_old)
 
             total_ticks += jnp.sum(mask.astype(jnp.int32))
             total_prog += jnp.sum(prog.astype(jnp.int32))
-            busy = busy.at[csl].add(prog.astype(jnp.int32))
+            busy = busy.at[kc.csl].add(prog.astype(jnp.int32))
+
+        # a connection wakes iff any of its (static) member ports asked —
+        # static take through the member matrix instead of a scatter-min
+        if self.kinds:
+            wake_p_f = self._flat(wake_p_segs)
+            wake_pad = jnp.concatenate([wake_p_f, jnp.zeros((1,), bool)])
+            conn_asked = jnp.any(wake_pad[self._member_sent_np], axis=1)
+            wake_conn = jnp.where(conn_asked, wake1, INF)
+        else:
+            wake_conn = jnp.full((self.n_conn,), INF)
 
         stats = dataclasses.replace(
             s.stats, ticks=s.stats.ticks + total_ticks,
@@ -415,7 +612,7 @@ class Simulation:
         return s, wake_conn
 
     # ------------------------------------------------------------------
-    def _epoch(self, s: SimState, until):
+    def _epoch(self, s: SimState):
         if self.naive:
             t = s.time  # process the current cycle, then advance by one
             active = jnp.ones((self.n_conn,), bool)
@@ -426,11 +623,10 @@ class Simulation:
                 t = jnp.minimum(t, s.next_sample)
             active = s.conn_wake <= t + EPS
 
-        wake_comp = jnp.full((self.n_comp,), INF)
-        wake_conn = jnp.full((self.n_conn,), INF)
+        wake1 = _align_after(t, 1.0)          # shared next-cycle wake point
         s = dataclasses.replace(s, time=t)
-        s, wake_comp = self._deliver(s, t, active, wake_comp)
-        s, wake_conn = self._tick_kinds(s, t, wake_conn)
+        s, wake_comp = self._deliver(s, t, active, wake1)
+        s, wake_conn = self._tick_kinds(s, t, wake1)
         s = dataclasses.replace(
             s,
             next_tick=jnp.minimum(s.next_tick, wake_comp),
@@ -442,7 +638,8 @@ class Simulation:
             s = dataclasses.replace(
                 s,
                 buf_samples=jnp.where(
-                    do, s.buf_samples.at[row].set(s.in_cnt), s.buf_samples),
+                    do, s.buf_samples.at[row].set(self._flat(s.in_cnt)),
+                    s.buf_samples),
                 sample_idx=s.sample_idx + do.astype(jnp.int32),
                 next_sample=jnp.where(do, s.next_sample + self.sample_period,
                                       s.next_sample))
@@ -457,20 +654,42 @@ class Simulation:
             t = jnp.minimum(t, s.next_sample)
         return t
 
+    def _live(self, s: SimState, until, max_epochs):
+        if self.naive:
+            more = s.time <= until + EPS
+        else:
+            more = self._next_event(s) <= until + EPS
+        return more & (s.stats.epochs < max_epochs)
+
     def _run(self, s: SimState, until, max_epochs):
         until = jnp.asarray(until, jnp.float32)
+        cond = lambda s: self._live(s, until, max_epochs)
+        if self.super_epoch <= 1:
+            return jax.lax.while_loop(cond, lambda s: self._epoch(s), s)
 
-        def cond(s):
-            if self.naive:
-                more = s.time <= until + EPS
-            else:
-                more = self._next_event(s) <= until + EPS
-            return more & (s.stats.epochs < max_epochs)
+        # Super-epoch fusion: K epochs per while iteration.  Each inner step
+        # re-checks liveness and is an exact no-op (lax.cond identity) once
+        # the horizon/epoch budget is reached, so results are bit-identical
+        # to the K=1 path while the loop condition round-trip is amortized
+        # K-fold and XLA can fuse across the unrolled steps.
+        def body(s):
+            def step(s, _):
+                s = jax.lax.cond(self._live(s, until, max_epochs),
+                                 self._epoch, lambda x: x, s)
+                return s, None
+            s, _ = jax.lax.scan(step, s, None, length=self.super_epoch,
+                                unroll=True)
+            return s
 
-        return jax.lax.while_loop(cond, lambda s: self._epoch(s, until), s)
+        return jax.lax.while_loop(cond, body, s)
 
     def run(self, state: SimState, until: float,
             max_epochs: int = 2_000_000) -> SimState:
-        """Advance the simulation to virtual time ``until`` (cycles)."""
+        """Advance the simulation to virtual time ``until`` (cycles).
+
+        When the simulation was built with ``donate=True`` (the default),
+        ``state``'s buffers are donated to the jitted loop and must not be
+        reused afterwards — keep using the *returned* state, or pass
+        ``copy_state(state)`` if the input must survive."""
         assert until < 2 ** 24, "float32 cycle precision bound (DESIGN.md)"
         return self._run_jit(state, until, max_epochs=max_epochs)

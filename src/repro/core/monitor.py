@@ -35,6 +35,7 @@ class Monitor:
         self.state = state
         self.domain = domain
         self.history: list[dict] = []
+        self._bn_cache: list[dict] = []
         self._httpd = None
         if http_port is not None:
             self._serve(http_port)
@@ -51,7 +52,8 @@ class Monitor:
             "progress_ticks": int(st.progress_ticks),
             "progress_ratio": float(int(st.progress_ticks) / max(ticks, 1)),
             "delivered": int(st.delivered),
-            "pending_messages": int(jnp.sum(s.in_cnt) + jnp.sum(s.out_cnt)),
+            "pending_messages": int(jnp.sum(self.sim.flat_in_cnt(s))
+                                    + jnp.sum(self.sim.flat_out_cnt(s))),
         }
 
     def inspect(self, kind: str, inst: int) -> dict:
@@ -70,8 +72,8 @@ class Monitor:
     def bottleneck_report(self, top: int = 5) -> list[dict]:
         """Fullest buffers first — the RTM Bottleneck Analyzer."""
         s = self.state
-        in_cnt = np.asarray(s.in_cnt)
-        out_cnt = np.asarray(s.out_cnt)
+        in_cnt = np.asarray(self.sim.flat_in_cnt(s))
+        out_cnt = np.asarray(self.sim.flat_out_cnt(s))
         rows = []
         for ki, k in enumerate(self.sim.kinds):
             pb = self.sim.port_base[ki]
@@ -116,6 +118,8 @@ class Monitor:
                 self.domain.end_task(tk)
             stat = self.status()
             self.history.append(stat)
+            if self._httpd:     # refresh the HTTP thread's safe snapshot
+                self._bn_cache = self.bottleneck_report()
             if verbose:
                 print(f"[RTM] vt={stat['virtual_time']:>10.1f} "
                       f"epochs={stat['epochs']:>8d} "
@@ -146,9 +150,18 @@ class Monitor:
 
         class H(BaseHTTPRequestHandler):
             def do_GET(self):
-                body = json.dumps(
-                    mon.status() if self.path != "/bottlenecks"
-                    else mon.bottleneck_report()).encode()
+                # The engine donates state buffers: while a chunk is being
+                # dispatched on the main thread, mon.state's arrays may
+                # already be deleted.  Fall back to the last snapshot taken
+                # between chunks rather than crashing the endpoint.
+                try:
+                    body = (mon.status() if self.path != "/bottlenecks"
+                            else mon.bottleneck_report())
+                except Exception:
+                    body = ((mon.history[-1] if mon.history else {})
+                            if self.path != "/bottlenecks"
+                            else mon._bn_cache)
+                body = json.dumps(body).encode()
                 self.send_response(200)
                 self.send_header("Content-Type", "application/json")
                 self.end_headers()

@@ -30,6 +30,20 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+try:                        # jax >= 0.5 exports it at top level
+    shard_map_compat = jax.shard_map
+except AttributeError:      # pragma: no cover
+    from jax.experimental.shard_map import shard_map as shard_map_compat
+
+# replication-check kwarg was renamed check_rep -> check_vma across versions
+import inspect as _inspect
+
+_SM_KW: dict = {}
+for _kw in ("check_vma", "check_rep"):
+    if _kw in _inspect.signature(shard_map_compat).parameters:
+        _SM_KW = {_kw: False}
+        break
+
 from .component import ComponentKind, TickResult
 from .engine import INF, SimBuilder, Simulation, _align_after
 from .message import MSG_WORDS, W_DST, W_TIME, f2i
@@ -109,24 +123,28 @@ class ShardedSim:
 
     # ------------------------------------------------------------------
     def _exchange(self, s, t_end):
-        """Drain gateway egress -> all_to_all -> inject gateway ingress."""
+        """Drain gateway egress -> all_to_all -> inject gateway ingress.
+
+        With the segmented port-state layout the gateway's buffers are its
+        own kind segment, so draining/injecting touches only that segment
+        (no full-array scatters)."""
         sim = self.sim
         npr, ch, mb = self.n_peers, self.chan, self.mailbox
         cap = sim.cap_phys
-        gb = self.gw_port_base
+        RK = REMOTE_KIND
 
         # --- drain egress in-buffers (ports 2k) into mailbox [P, C, MB, W]
-        eg = gb + jnp.arange(npr * ch, dtype=jnp.int32) * 2       # [P*C]
-        heads, cnts = s.in_head[eg], s.in_cnt[eg]                 # [P*C]
+        eg = np.arange(npr * ch, dtype=np.int32) * 2   # gateway-local ids
+        heads, cnts = s.in_head[RK][eg], s.in_cnt[RK][eg]         # [P*C]
         idx = (heads[:, None] + jnp.arange(mb, dtype=jnp.int32)[None, :]) % cap
-        msgs = s.in_buf[eg[:, None], idx]                         # [P*C,MB,W]
+        msgs = s.in_buf[RK][eg[:, None], idx]                     # [P*C,MB,W]
         vmask = jnp.arange(mb)[None, :] < cnts[:, None]
         msgs = jnp.where(vmask[:, :, None], msgs, 0)
         out_mail = msgs.reshape(npr, ch, mb, MSG_WORDS)
         s = dataclasses.replace(
             s,
-            in_cnt=s.in_cnt.at[eg].set(0),
-            in_head=s.in_head.at[eg].set(0))
+            in_cnt={**s.in_cnt, RK: s.in_cnt[RK].at[eg].set(0)},
+            in_head={**s.in_head, RK: s.in_head[RK].at[eg].set(0)})
 
         # --- transport: rotate-by-offset exchange over the shard axis.
         # Peer offset p on shard i targets shard (i+1+p) % D; ppermute each
@@ -143,7 +161,8 @@ class ShardedSim:
             in_mail = out_mail
 
         # --- inject into gateway ingress out-buffers (ports 2k+1)
-        ing = gb + jnp.arange(npr * ch, dtype=jnp.int32) * 2 + 1
+        ing = np.arange(npr * ch, dtype=np.int32) * 2 + 1  # gateway-local
+        ing_g = self.gw_port_base + ing                    # global ids
         flat = in_mail.reshape(npr * ch, mb, MSG_WORDS)
         valid = flat[:, :, 0] != 0                                 # opcode!=0
         n_new = jnp.sum(valid, axis=1).astype(jnp.int32)
@@ -151,7 +170,7 @@ class ShardedSim:
         order = jnp.argsort(~valid, axis=1, stable=True)
         flat = jnp.take_along_axis(flat, order[:, :, None], axis=1)
         # rewrite dst to the ingress port's local peer; stamp ready time
-        peer = sim.c["peer"][ing]                                  # [P*C]
+        peer = sim.c["peer"][ing_g]                                # [P*C]
         flat = flat.at[:, :, W_DST].set(
             jnp.broadcast_to(peer[:, None], flat.shape[:2]))
         flat = flat.at[:, :, W_TIME].set(f2i(jnp.full(flat.shape[:2],
@@ -162,11 +181,12 @@ class ShardedSim:
             else flat[:, :cap]
         s = dataclasses.replace(
             s,
-            out_buf=s.out_buf.at[ing].set(stock),
-            out_head=s.out_head.at[ing].set(0),
-            out_cnt=s.out_cnt.at[ing].set(jnp.minimum(n_new, cap)))
+            out_buf={**s.out_buf, RK: s.out_buf[RK].at[ing].set(stock)},
+            out_head={**s.out_head, RK: s.out_head[RK].at[ing].set(0)},
+            out_cnt={**s.out_cnt,
+                     RK: s.out_cnt[RK].at[ing].set(jnp.minimum(n_new, cap))})
         # wake the serving connections so the crossbar forwards them
-        conns = sim.c["port_conn"][ing]
+        conns = sim.c["port_conn"][ing_g]
         has = n_new > 0
         cw = s.conn_wake.at[jnp.where(has, conns, sim.n_conn)].min(
             _align_after(t_end, 1.0), mode="drop")
@@ -192,8 +212,8 @@ class ShardedSim:
         spec = lambda a: P(*([self.axis] + [None] * (a.ndim - 1)))
         in_specs = jax.tree.map(spec, stacked_state)
 
-        @partial(jax.shard_map, mesh=self.mesh, in_specs=(in_specs,),
-                 out_specs=(in_specs, P(self.axis)), check_vma=False)
+        @partial(shard_map_compat, mesh=self.mesh, in_specs=(in_specs,),
+                 out_specs=(in_specs, P(self.axis)), **_SM_KW)
         def _run(st):
             s = jax.tree.map(lambda a: a[0], st)     # local shard
 

@@ -10,6 +10,14 @@ view, whose ``recv``/``send``/``peek`` mirror Akita's port API — functional
 Send rejects when the outgoing buffer is full (returns ``ok=False``) exactly
 like Akita; the engine uses the resulting full/not-full transitions for Smart
 Ticking rule 2 and Availability Backpropagation.
+
+Globally, port state lives in *per-kind segments* of the engine's
+``SimState`` (see ENGINE_PERF.md); a ``Ports`` view is one instance's window
+into its kind's segment.  Ring-buffer reads/writes at the (dynamic) head and
+tail positions are formulated as one-hot selects over the tiny ``CAP`` axis
+rather than dynamic indexing: under ``vmap`` the latter lowers to XLA
+gather/scatter, which on CPU costs two orders of magnitude more than the
+equivalent masked arithmetic.
 """
 from __future__ import annotations
 
@@ -54,7 +62,9 @@ class Ports:
         ``ok`` is False when the buffer is empty or the head message has not
         yet arrived (its connection-stamped ready time is in the future).
         """
-        msg = self.in_buf[p, self.in_head[p]]
+        row = self.in_buf[p]                            # [CAP, W]
+        oh = self.in_head[p] == jnp.arange(self._cap_phys)
+        msg = jnp.sum(row * oh[:, None].astype(row.dtype), axis=0)
         ok = (self.in_cnt[p] > 0) & (i2f(msg[W_TIME]) <= self.t + EPS)
         return msg, ok
 
@@ -87,10 +97,12 @@ class Ports:
         msg = msg.at[W_DST].set(
             jnp.where(msg[W_DST] < 0, self.peer[p], msg[W_DST]))
         tail = (self.out_head[p] + self.out_cnt[p]) % self._cap_phys
-        old = self.out_buf[p, tail]
+        row = self.out_buf[p]                           # [CAP, W]
+        oh = (tail == jnp.arange(self._cap_phys)) & ok
+        row = jnp.where(oh[:, None], msg[None, :], row)
         new = dataclasses.replace(
             self,
-            out_buf=self.out_buf.at[p, tail].set(jnp.where(ok, msg, old)),
+            out_buf=self.out_buf.at[p].set(row),
             out_cnt=self.out_cnt.at[p].add(oki),
         )
         return new, ok

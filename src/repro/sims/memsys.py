@@ -134,7 +134,8 @@ def _workload(pattern: str, n_cores: int, n_reqs: int, rng):
 def build_memsys(n_cores: int = 8, pattern: str = "mixed",
                  n_reqs: int = 64, dram_latency: float = 30.0,
                  naive: bool = False, seed: int = 0,
-                 sample_period: float = 0.0, private_dram: bool = False):
+                 sample_period: float = 0.0, private_dram: bool = False,
+                 super_epoch: int | None = None, donate: bool = True):
     rng = np.random.default_rng(seed)
     remaining, think, seq = _workload(pattern, n_cores, n_reqs, rng)
     b = SimBuilder()
@@ -171,7 +172,8 @@ def build_memsys(n_cores: int = 8, pattern: str = "mixed",
         # connection (Akita's multi-port round-robin crossbar)
         b.connect([l1.port(i, 1) for i in range(n_cores)]
                   + [dram.port(0, 0)], latency=dram_latency)
-    sim = b.build(naive=naive, sample_period=sample_period)
+    sim = b.build(naive=naive, sample_period=sample_period,
+                  super_epoch=super_epoch, donate=donate)
     st = sim.init_state()
     return sim, st
 
@@ -199,18 +201,17 @@ def _patch_dsts(sim, st, n_cores):
     # l1 memory-side sends go to the DRAM port; l1 replies use msg src. The
     # l1 tick uses msg_new for forwards (default peer = -1 on the crossbar),
     # so rewrite: default dst for the l1 mem port = dram port id.
-    peer = np.asarray(sim.c["peer"]).copy()
-    for i in range(n_cores):
-        peer[sim.port_id("l1", i, 1)] = dram_pid
-    import jax.numpy as jnp2
-    sim.c["peer"] = jnp2.asarray(peer)
+    sim.set_default_peers(
+        {sim.port_id("l1", i, 1): dram_pid for i in range(n_cores)})
     return sim, st
 
 
 def build(n_cores=8, pattern="mixed", n_reqs=64, naive=False, seed=0,
-          dram_latency=30.0, sample_period=0.0, private_dram=False):
+          dram_latency=30.0, sample_period=0.0, private_dram=False,
+          super_epoch=None, donate=True):
     sim, st = build_memsys(n_cores, pattern, n_reqs, dram_latency, naive,
-                           seed, sample_period, private_dram)
+                           seed, sample_period, private_dram,
+                           super_epoch=super_epoch, donate=donate)
     if private_dram:
         return sim, st          # 1:1 links use default peers
     return _patch_dsts(sim, st, n_cores)
@@ -279,8 +280,7 @@ def build_sharded_memsys(mesh=None, n_shards: int = 1,
                     mailbox=8)
     # the l1 crossbar needs explicit DRAM addressing (multi-member conn)
     dram_pid = ss.sim.port_id("dram", 0, 0)
-    peer = np.asarray(ss.sim.c["peer"]).copy()
-    for i in range(tiles_per_shard):
-        peer[ss.sim.port_id("l1", i, 1)] = dram_pid
-    ss.sim.c["peer"] = jnp.asarray(peer)
+    ss.sim.set_default_peers(
+        {ss.sim.port_id("l1", i, 1): dram_pid
+         for i in range(tiles_per_shard)})
     return ss

@@ -6,8 +6,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:                           # optional: only the property test needs it
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (ComponentKind, SimBuilder, TickResult, msg_new,
                         payload)
@@ -201,17 +206,8 @@ def _build_random(n_stage, n_lane, counts, caps, cons_period, latency, naive):
     return b.build(naive=naive)
 
 
-@settings(max_examples=10, deadline=None, derandomize=True)
-@given(
-    n_stage=st.integers(0, 3),
-    n_lane=st.integers(1, 3),
-    seed=st.integers(0, 2 ** 31 - 1),
-    cap0=st.integers(1, 3), cap1=st.integers(1, 3), cap2=st.integers(1, 3),
-    cons_period=st.integers(1, 4),
-    latency=st.integers(1, 3),
-)
-def test_smart_equals_naive(n_stage, n_lane, seed, cap0, cap1, cap2,
-                            cons_period, latency):
+def _check_smart_equals_naive(n_stage, n_lane, seed, cap0, cap1, cap2,
+                              cons_period, latency):
     rng = np.random.default_rng(seed)
     counts = rng.integers(0, 8, size=n_lane).tolist()
     horizon = 400.0
@@ -235,3 +231,26 @@ def test_smart_equals_naive(n_stage, n_lane, seed, cap0, cap1, cap2,
     assert smart.stats.progress_ticks.item() == naive_s.stats.progress_ticks.item()
     # and Smart Ticking actually skips work:
     assert smart.stats.ticks.item() <= naive_s.stats.ticks.item()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(
+        n_stage=st.integers(0, 3),
+        n_lane=st.integers(1, 3),
+        seed=st.integers(0, 2 ** 31 - 1),
+        cap0=st.integers(1, 3), cap1=st.integers(1, 3),
+        cap2=st.integers(1, 3),
+        cons_period=st.integers(1, 4),
+        latency=st.integers(1, 3),
+    )
+    def test_smart_equals_naive(n_stage, n_lane, seed, cap0, cap1, cap2,
+                                cons_period, latency):
+        _check_smart_equals_naive(n_stage, n_lane, seed, cap0, cap1, cap2,
+                                  cons_period, latency)
+else:
+    def test_smart_equals_naive():
+        """One fixed example when hypothesis is unavailable; the full
+        property run skips (satellite: collection must not abort)."""
+        _check_smart_equals_naive(2, 2, 1234, 1, 2, 1, 3, 2)
+        pytest.importorskip("hypothesis")

@@ -1,0 +1,97 @@
+"""Equivalence + donation guarantees for the engine's performance paths.
+
+The hot loop has three build-time performance axes (super-epoch fusion,
+donated zero-copy stepping, segmented per-kind port state — ENGINE_PERF.md);
+this suite pins the invariant that none of them may change results: a fused
++ donated run must produce *bit-identical* ``Stats``, final virtual time and
+component state versus the K=1 non-donated compatibility path, across every
+memsys workload pattern.  It also proves the donation contract itself: a
+donating ``run()`` releases the input state's buffers (true zero-copy), a
+non-donating build keeps them alive, and ``copy_state`` makes an input
+survive donation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sims.memsys import build, finish_stats
+
+PATTERNS = ["compute", "stream", "pointer", "idle_half", "mixed"]
+
+STAT_FIELDS = ("epochs", "ticks", "progress_ticks", "delivered")
+
+
+def _assert_states_identical(a, b):
+    assert float(a.time) == float(b.time)
+    for f in STAT_FIELDS:
+        assert int(getattr(a.stats, f)) == int(getattr(b.stats, f)), f
+    np.testing.assert_array_equal(np.asarray(a.stats.busy),
+                                  np.asarray(b.stats.busy))
+    np.testing.assert_array_equal(np.asarray(a.next_tick),
+                                  np.asarray(b.next_tick))
+    for kname in a.comp_state:
+        for la, lb in zip(jax.tree.leaves(a.comp_state[kname]),
+                          jax.tree.leaves(b.comp_state[kname])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for seg_a, seg_b in ((a.in_cnt, b.in_cnt), (a.out_cnt, b.out_cnt)):
+        for kname in seg_a:
+            np.testing.assert_array_equal(np.asarray(seg_a[kname]),
+                                          np.asarray(seg_b[kname]))
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_fused_donated_matches_k1_reference(pattern):
+    ref_sim, ref_st = build(n_cores=4, pattern=pattern, n_reqs=12,
+                            super_epoch=1, donate=False)
+    ref = ref_sim.run(ref_st, until=20000.0)
+    fus_sim, fus_st = build(n_cores=4, pattern=pattern, n_reqs=12,
+                            super_epoch=6, donate=True)
+    out = fus_sim.run(fus_st, until=20000.0)
+    _assert_states_identical(out, ref)
+    # the workload actually completed (equivalence on a dead sim is vacuous)
+    assert finish_stats(fus_sim, out)["remaining"] == 0
+
+
+@pytest.mark.parametrize("super_epoch", [2, 3, 8])
+def test_fusion_width_is_observation_invariant(super_epoch):
+    ref_sim, ref_st = build(n_cores=3, pattern="mixed", n_reqs=8,
+                            super_epoch=1, donate=False)
+    ref = ref_sim.run(ref_st, until=20000.0)
+    sim, st = build(n_cores=3, pattern="mixed", n_reqs=8,
+                    super_epoch=super_epoch, donate=False)
+    _assert_states_identical(sim.run(st, until=20000.0), ref)
+
+
+def test_donation_releases_input_buffers():
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4)
+    out = sim.run(st, until=100.0)
+    # the donated input must not be retained — big ring buffers, small
+    # count arrays, component state and scalars are all given up
+    assert st.next_tick.is_deleted()
+    assert all(v.is_deleted() for v in st.in_buf.values())
+    assert all(v.is_deleted() for v in st.out_buf.values())
+    assert all(v.is_deleted() for v in st.in_cnt.values())
+    assert st.stats.epochs.is_deleted()
+    # the returned state is alive and chains into the next run
+    out2 = sim.run(out, until=200.0)
+    assert float(out2.time) >= float(0.0)
+
+
+def test_copy_state_survives_donation():
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4)
+    keep = sim.copy_state(st)
+    out = sim.run(st, until=5000.0)
+    assert st.next_tick.is_deleted()
+    assert not keep.next_tick.is_deleted()
+    # the copy replays to the same result
+    out2 = sim.run(keep, until=5000.0)
+    _assert_states_identical(out, out2)
+
+
+def test_no_donate_build_keeps_input_reusable():
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4, donate=False)
+    out = sim.run(st, until=5000.0)
+    assert not st.next_tick.is_deleted()
+    out2 = sim.run(st, until=5000.0)          # same input, second run
+    _assert_states_identical(out, out2)
