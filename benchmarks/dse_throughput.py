@@ -1,0 +1,106 @@
+"""Design-space exploration throughput: configs/sec for one vmapped jitted
+sweep at B ∈ {1, 8, 64, 256} versus sequential unbatched runs (memsys,
+mixed pattern).
+
+Two sequential baselines bracket what the DSE subsystem buys:
+
+* ``sequential_rebuild`` — the pre-SimParams workflow this PR replaces:
+  every design point is its own ``build()`` + jit trace/compile + run
+  (timing knobs were baked constants, so N points cost N compiles).
+  Measured on a subsample (it is slow by construction) and reported as a
+  configs/sec rate.  The >= 8x acceptance bar compares against this.
+* ``sequential_sharedjit`` — sequential runs that already share one
+  compiled program via traced params (this PR's engine refactor alone,
+  no batching).  The batched speedup over *this* isolates what the
+  config-axis vmap adds (per-epoch overhead amortization; bounded by
+  core count on small hosts).
+"""
+import time
+
+import jax
+
+from repro.dse import BatchRunner, build_param_batch, lane, stack_states
+from repro.sims.memsys import build
+
+BATCHES = (1, 8, 64, 256)
+SEQ_B = 64          # batch size at which the baselines are measured
+REBUILD_SAMPLE = 3  # rebuild+recompile baseline subsample (a rate suffices)
+UNTIL = 50000.0
+N_CORES, N_REQS = 8, 24
+
+
+def _points(b):
+    """b design points spreading crossbar latency and L1 boost."""
+    return [{"conn_latency[-1]": 10.0 + (30.0 * i) / max(b - 1, 1),
+             "kind.l1.extra_hit_rate": 0.8 * ((i * 7) % b) / max(b - 1, 1)}
+            for i in range(b)]
+
+
+def bench(n_cores=N_CORES, n_reqs=N_REQS):
+    sim, st = build(n_cores=n_cores, pattern="mixed", n_reqs=n_reqs,
+                    donate=True)
+    runner = BatchRunner(sim)
+    rows = []
+
+    # baseline 1: rebuild + recompile + run per design point (pre-SimParams
+    # reality — each build() re-jits even when shapes match)
+    t0 = time.perf_counter()
+    for i in range(REBUILD_SAMPLE):
+        s_i, st_i = build(n_cores=n_cores, pattern="mixed", n_reqs=n_reqs,
+                          dram_latency=10.0 + 10.0 * i, donate=True)
+        out = s_i.run(st_i, UNTIL)
+        out.time.block_until_ready()
+    dt = time.perf_counter() - t0
+    rebuild_cps = REBUILD_SAMPLE / dt
+    rows.append({
+        "name": "dse_throughput/sequential_rebuild",
+        "us_per_call": dt / REBUILD_SAMPLE * 1e6,
+        "derived": f"{rebuild_cps:.2f} configs/s (build+compile+run per "
+                   f"point, {REBUILD_SAMPLE}-point sample)",
+        "configs_per_sec": rebuild_cps,
+    })
+
+    # baseline 2: sequential runs sharing one compiled program (traced
+    # params, no batching)
+    pts = _points(SEQ_B)
+    params = [lane(build_param_batch(sim, [p]), 0) for p in pts]
+    warm = sim.run(sim.copy_state(st), UNTIL, params=params[0])
+    warm.time.block_until_ready()
+    states = [jax.block_until_ready(sim.copy_state(st)) for _ in pts]
+    t0 = time.perf_counter()
+    outs = [sim.run(s, UNTIL, params=p) for s, p in zip(states, params)]
+    jax.block_until_ready(outs[-1].time)
+    dt_seq = time.perf_counter() - t0
+    shared_cps = SEQ_B / dt_seq
+    rows.append({
+        "name": f"dse_throughput/sequential_sharedjit_B{SEQ_B}",
+        "us_per_call": dt_seq * 1e6,
+        "derived": f"{shared_cps:.1f} configs/s (one compile, sequential "
+                   f"runs: the traced-params win alone)",
+        "configs_per_sec": shared_cps,
+    })
+
+    for b in BATCHES:
+        pb = build_param_batch(sim, _points(b))
+        out = runner.run_batch(stack_states(st, b), pb, UNTIL)  # compile+run
+        out.time.block_until_ready()
+        sb = jax.block_until_ready(stack_states(st, b))
+        t0 = time.perf_counter()
+        out = runner.run_batch(sb, pb, UNTIL)
+        out.time.block_until_ready()
+        dt = time.perf_counter() - t0
+        cps = b / dt
+        row = {
+            "name": f"dse_throughput/B{b}",
+            "us_per_call": dt * 1e6,
+            "derived": f"{cps:.1f} configs/s "
+                       f"({cps / rebuild_cps:.1f}x rebuild, "
+                       f"{cps / shared_cps:.2f}x shared-jit)",
+            "configs_per_sec": cps,
+            "speedup_vs_sequential": cps / rebuild_cps,
+            "speedup_vs_sharedjit": cps / shared_cps,
+        }
+        if b == SEQ_B:
+            row["derived"] += " [acceptance: >=8x rebuild]"
+        rows.append(row)
+    return rows

@@ -6,6 +6,7 @@
   Fig 12/13  onira_cpi            RISC-V timing-model CPI accuracy
   Fig 14     triosim_validation   DP/TP/PP step-time validation
   (framework) kernels             attention/SSD algorithm benchmarks
+  (dse)      dse_throughput       batched-sweep configs/sec (DSE.md)
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the assigned
 architectures come from the dry-run (see launch/dryrun.py + EXPERIMENTS.md);
@@ -28,8 +29,9 @@ def main() -> None:
                          "so future PRs have a perf trajectory to compare")
     args = ap.parse_args()
 
-    from . import (kernels, onira_cpi, parallel_sim, pdes_scaling,
-                   smart_ticking, tracing_overhead, triosim_validation)
+    from . import (dse_throughput, kernels, onira_cpi, parallel_sim,
+                   pdes_scaling, smart_ticking, tracing_overhead,
+                   triosim_validation)
     modules = {
         "smart_ticking": smart_ticking,
         "parallel_sim": parallel_sim,
@@ -38,6 +40,7 @@ def main() -> None:
         "triosim_validation": triosim_validation,
         "kernels": kernels,
         "pdes_scaling": pdes_scaling,
+        "dse_throughput": dse_throughput,
     }
     if args.only:
         modules = {k: v for k, v in modules.items() if k in args.only}

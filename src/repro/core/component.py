@@ -13,6 +13,14 @@ execution — is the engine's job (paper Fig. 3).
 ``tick_fn(state, ports, t) -> (state, ports, progress)`` or
 ``tick_fn(state, ports, t) -> (state, ports, TickResult(progress, next_time))``
 
+A kind may additionally opt in to *traced model parameters* by declaring a
+``params`` pytree: its ``tick_fn`` then takes a 4th argument —
+``tick_fn(state, ports, t, params)`` — holding that pytree (shared by all
+instances of the kind, i.e. broadcast under the instance vmap).  Declared
+defaults are baked into ``Simulation.default_params()`` and can be
+overridden per ``run()`` — or batched over by ``repro.dse`` — without
+rebuilding or recompiling (see DSE.md).
+
 ``next_time`` (optional, -1 = unset) requests a wake at an arbitrary future
 virtual time — this is the pure event-driven escape hatch (used by TrioSim to
 fast-forward over operator execution) that Smart Ticking layers on top of.
@@ -64,6 +72,8 @@ class ComponentKind:
     period: float | Any = 1.0            # scalar or [N] — cycle length
     cap: int | Any = 4                   # scalar, [P], or [N, P] buffer capacity
     start_asleep: bool = False           # if True, wait for a message to start
+    params: Any = None                   # opt-in traced model params pytree;
+    #                                      non-None => tick_fn is 4-ary
 
     @property
     def n_ports_total(self) -> int:

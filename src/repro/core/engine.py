@@ -49,8 +49,14 @@ Hot-loop performance architecture (see ENGINE_PERF.md):
   caller (use :meth:`Simulation.copy_state` first, or build with
   ``donate=False``).
 * **Hoisted constants** — per-kind static index arrays (port slices, global
-  port ids, capacity/period/peer slices, connection-membership masks) are
+  port ids, capacity/peer slices, connection-membership masks) are
   precomputed once at build time instead of re-derived every epoch.
+* **Static/traced split (DSE.md)** — structure (topology, wiring,
+  capacities) stays a build-time constant, while the numeric timing/model
+  knobs (connection latencies, per-kind tick periods, opt-in per-kind
+  model params) live in a traced :class:`SimParams` pytree threaded
+  through ``run()``: one compiled loop serves every design point of a
+  structure, and ``repro.dse`` vmaps it over stacked param batches.
 
 Parallelism is transparent exactly as the paper demands: ``tick_fn`` is
 single-instance, lock-free code; the engine vmaps it over instances (VPU
@@ -80,6 +86,39 @@ def _align_after(t, period):
 def _align_at_or_after(t, period):
     """First grid point of ``period`` at or after ``t``."""
     return jnp.ceil(t / period - EPS) * period
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Traced timing/model parameters of a compiled topology (DSE.md).
+
+    The build splits the simulation's configuration in two: *structure*
+    (topology, port wiring, buffer capacities, kind/instance counts) stays
+    a hoisted build-time constant, while the *numeric knobs* below are a
+    pytree threaded through the jitted hot loop as ordinary traced
+    operands.  One compiled simulation therefore serves every design point
+    that shares a structure: ``run(..., params=p)`` re-runs without
+    recompiling, and ``repro.dse`` vmaps the loop over a stacked
+    ``SimParams`` batch to simulate hundreds of configurations at once.
+
+    Leaves (all shapes are per-topology static):
+      * ``conn_latency`` — ``[C]`` f32 connection latencies in cycles
+        (must stay >= 1; the no-zero-delay contract of ``connect`` is a
+        structural invariant the trace cannot re-check).
+      * ``periods`` — dict kind name -> ``[n_instances]`` f32 tick periods.
+      * ``kind`` — dict kind name -> that kind's opt-in model-parameter
+        pytree (``ComponentKind.params``; ``{}`` for kinds without one),
+        passed as the 4th argument to a 4-ary ``tick_fn``.
+
+    Params enter the loop as broadcast operands only — never as gather or
+    scatter indices — so the scatter-free hot-loop property (ENGINE_PERF.md)
+    is preserved under both tracing and batch vmapping.
+    """
+
+    conn_latency: jax.Array    # [C] f32
+    periods: dict              # kind name -> [n_k] f32
+    kind: dict                 # kind name -> params pytree ({} if none)
 
 
 @jax.tree_util.register_dataclass
@@ -221,10 +260,6 @@ class Simulation:
             if self.kinds else np.zeros((0,), np.float32)
         caps = np.concatenate([k.caps().reshape(-1) for k in self.kinds]) \
             if self.kinds else np.zeros((0,), np.int32)
-        port_owner = np.concatenate([
-            np.repeat(np.arange(k.n_instances, dtype=np.int32) + self.comp_base[i],
-                      k.n_ports)
-            for i, k in enumerate(self.kinds)]) if self.kinds else np.zeros((0,), np.int32)
         self.cap_phys = int(cap_phys or max(4, caps.max(initial=1)))
         assert caps.max(initial=1) <= self.cap_phys
 
@@ -255,13 +290,14 @@ class Simulation:
         self.n_conn, self.max_m = n_conn, max_m
 
         # --- constants on device (only entries the hot loop / pdes still
-        # read; member/latency/periods/port_owner live on as the hoisted
-        # static copies below — edit those, not this dict) ----------------
+        # read; member/latency/periods live on as the hoisted static copies
+        # below and as SimParams defaults — edit those, not this dict) ----
         self.c = dict(
             caps=jnp.asarray(caps), port_conn=jnp.asarray(port_conn),
             peer=jnp.asarray(peer),
         )
         self._periods_np, self._caps_np = periods, caps
+        self._latency_np = latency
         # --- hoisted delivery constants (scatter-free formulation) -------
         # slot_of_port: inverse of the member matrix — each port is served
         # by at most one connection slot, so winner pops become static takes.
@@ -277,14 +313,12 @@ class Simulation:
         self._mps_j = jnp.asarray(self._mps_np)
         # member matrix with invalid slots pointing past the wake-mask pad
         self._member_sent_np = np.where(member >= 0, member, pg)
-        self._lat_f = jnp.asarray(np.repeat(latency, max_m))      # [C*M]
-        self._port_period = jnp.asarray(
-            periods[port_owner] if pg else np.zeros((0,), np.float32))
         self._apg = np.arange(pg, dtype=np.int32)                 # [PG]
         self._acap = np.arange(self.cap_phys, dtype=np.int32)     # [CAP]
         self._am = np.arange(max_m, dtype=np.int32)               # [M]
         self._acm = np.arange(CM, dtype=np.int32)                 # [C*M]
         self._build_kind_consts()
+        self._dp = self.default_params()
         self._jit_kwargs: dict[str, Any] = dict(
             static_argnames=("max_epochs",))
         if donate:
@@ -308,6 +342,21 @@ class Simulation:
                 caps_f=jnp.asarray(self._caps_np[pb:pb + np_k]),
                 gid=jnp.arange(pb, pb + np_k, dtype=jnp.int32).reshape(n, p),
                 peer=jnp.asarray(peer[pb:pb + np_k].reshape(n, p))))
+
+    def default_params(self) -> SimParams:
+        """The :class:`SimParams` this topology was built with.
+
+        Running with ``params=None`` is equivalent to (and compiles the
+        same program as) running with these values baked in as constants;
+        override leaves (or stack many variants — ``repro.dse``) to
+        explore other design points without rebuilding or recompiling.
+        """
+        return SimParams(
+            conn_latency=jnp.asarray(self._latency_np),
+            periods={kc.name: kc.periods for kc in self._kc},
+            kind={k.name: (jax.tree.map(jnp.asarray, k.params)
+                           if k.params is not None else {})
+                  for k in self.kinds})
 
     def set_default_peers(self, mapping: dict[int, int]):
         """Rewrite default peers (global port id -> peer port id) and refresh
@@ -413,10 +462,19 @@ class Simulation:
     # serving connection (the crossbar contract; arbitration cannot see
     # across connections — the previous scatter formulation corrupted
     # cross-connection collisions just the same, via double in_cnt adds).
-    def _deliver(self, s: SimState, t, active, wake1):
+    # Traced params (SimParams) enter this phase as broadcast operands only:
+    # per-connection latency is repeated over the (static) member axis and
+    # per-kind periods over each kind's (static) port count — both are
+    # shape-preserving broadcasts XLA folds to constants when the params are
+    # the build-time defaults, keeping the params=None path bit- and
+    # schedule-identical to the pre-params engine.
+    def _deliver(self, s: SimState, P: SimParams, t, active, wake1):
         if not self.kinds:
             return s, jnp.zeros((0,), jnp.float32)
         c = self.c
+        lat_f = jnp.repeat(P.conn_latency, self.max_m)            # [C*M]
+        pp = [jnp.repeat(P.periods[kc.name], kc.p) for kc in self._kc]
+        port_period = pp[0] if len(pp) == 1 else jnp.concatenate(pp)  # [PG]
         C, M, PG = self.n_conn, self.max_m, self.n_ports_g
         CM = C * M
         mps, valid = self._mps_np, jnp.asarray(self._valid_np)   # [C, M]
@@ -445,7 +503,7 @@ class Simulation:
         # per destination port: did it receive, and from which member slot
         got = jnp.any(OHwin, axis=0)                     # [PG]
         wslot = jnp.sum(OHwin * self._acm[:, None], axis=0)       # [PG]
-        arrive = t + self._lat_f                         # [CM]
+        arrive = t + lat_f                               # [CM]
         msg_f = head.reshape(CM, MSG_WORDS).at[:, W_TIME].set(f2i(arrive))
         msg_port = msg_f[wslot]                          # [PG, W]
         arr_port = jnp.where(got, arrive[wslot], INF)    # [PG]
@@ -463,8 +521,8 @@ class Simulation:
         # port, then min-reduced onto components (ports are owner-major).
         freed_port = (dec > 0) & full_before_out
         wake_port = jnp.minimum(
-            _align_at_or_after(arr_port, self._port_period),
-            jnp.where(freed_port, _align_after(t, self._port_period), INF))
+            _align_at_or_after(arr_port, port_period),
+            jnp.where(freed_port, _align_after(t, port_period), INF))
         wake_comp = self._port_min_to_comp(wake_port)
 
         # per-kind segment updates (pure where/add on each segment slice)
@@ -505,7 +563,7 @@ class Simulation:
     # ------------------------------------------------------------------
     # Tick phase: vmap each kind's tick_fn over its instances; with the
     # segmented layout each kind reads/writes only its own segment.
-    def _tick_kinds(self, s: SimState, t, wake1):
+    def _tick_kinds(self, s: SimState, P: SimParams, t, wake1):
         next_tick = s.next_tick
         comp_state = dict(s.comp_state)
         in_buf, in_head, in_cnt = dict(s.in_buf), dict(s.in_head), dict(s.in_cnt)
@@ -520,18 +578,25 @@ class Simulation:
         for ki, kind in enumerate(self.kinds):
             kc = self._kc[ki]
             n, p, name = kc.n, kc.p, kc.name
+            periods_k = P.periods[name]
             if self.naive:
-                r = jnp.remainder(t, kc.periods)
-                mask = (jnp.abs(r) < EPS) | (jnp.abs(r - kc.periods) < EPS)
+                r = jnp.remainder(t, periods_k)
+                mask = (jnp.abs(r) < EPS) | (jnp.abs(r - periods_k) < EPS)
             else:
                 mask = next_tick[kc.csl] <= t + EPS
 
             sh = lambda a: a.reshape(n, p, *a.shape[1:])
+            # kind params are closed over, not vmapped: every instance of a
+            # kind sees the same (possibly traced) parameter pytree
+            kp = P.kind.get(name, {})
+            wants_params = kind.params is not None
 
-            def one(st_i, ib, ih, ic, ob, oh, oc, cp, g, pe, kind=kind):
+            def one(st_i, ib, ih, ic, ob, oh, oc, cp, g, pe, kind=kind,
+                    kp=kp, wants_params=wants_params):
                 ports = Ports(ib, ih, ic, ob, oh, oc, cp, g, pe, tf)
-                st2, ports2, res = normalize_tick_output(
-                    kind.tick_fn(st_i, ports, tf))
+                out = (kind.tick_fn(st_i, ports, tf, kp) if wants_params
+                       else kind.tick_fn(st_i, ports, tf))
+                st2, ports2, res = normalize_tick_output(out)
                 return (st2, ports2.in_buf, ports2.in_head, ports2.in_cnt,
                         ports2.out_buf, ports2.out_head, ports2.out_cnt,
                         res.progress, res.next_time)
@@ -565,7 +630,7 @@ class Simulation:
             prog = prog & mask
             if not self.naive:
                 # Rule 3: progress => next cycle; no progress => sleep.
-                base = jnp.where(prog, _align_after(t, kc.periods), INF)
+                base = jnp.where(prog, _align_after(t, periods_k), INF)
                 custom = jnp.where(nxt > -0.5, jnp.maximum(nxt, t + EPS), base)
                 # In-flight arrivals: a ticked component must not sleep past
                 # the ready time of a message already in its buffers (rule 1
@@ -576,7 +641,7 @@ class Simulation:
                 hr = i2f(jnp.sum(hb * hOH.astype(jnp.int32), axis=1))
                 pend = (in_cnt[name] > 0) & (hr > t + EPS)
                 w = jnp.where(pend, hr, INF).reshape(n, p)
-                arr = _align_at_or_after(jnp.min(w, axis=1), kc.periods)
+                arr = _align_at_or_after(jnp.min(w, axis=1), periods_k)
                 custom = jnp.minimum(custom, arr)
                 next_tick = next_tick.at[kc.csl].set(
                     jnp.where(mask, custom, next_tick[kc.csl]))
@@ -612,7 +677,7 @@ class Simulation:
         return s, wake_conn
 
     # ------------------------------------------------------------------
-    def _epoch(self, s: SimState):
+    def _epoch(self, s: SimState, P: SimParams):
         if self.naive:
             t = s.time  # process the current cycle, then advance by one
             active = jnp.ones((self.n_conn,), bool)
@@ -625,8 +690,8 @@ class Simulation:
 
         wake1 = _align_after(t, 1.0)          # shared next-cycle wake point
         s = dataclasses.replace(s, time=t)
-        s, wake_comp = self._deliver(s, t, active, wake1)
-        s, wake_conn = self._tick_kinds(s, t, wake1)
+        s, wake_comp = self._deliver(s, P, t, active, wake1)
+        s, wake_conn = self._tick_kinds(s, P, t, wake1)
         s = dataclasses.replace(
             s,
             next_tick=jnp.minimum(s.next_tick, wake_comp),
@@ -661,11 +726,13 @@ class Simulation:
             more = self._next_event(s) <= until + EPS
         return more & (s.stats.epochs < max_epochs)
 
-    def _run(self, s: SimState, until, max_epochs):
+    def _run(self, s: SimState, until, max_epochs,
+             params: SimParams | None = None):
+        P = self._dp if params is None else params
         until = jnp.asarray(until, jnp.float32)
         cond = lambda s: self._live(s, until, max_epochs)
         if self.super_epoch <= 1:
-            return jax.lax.while_loop(cond, lambda s: self._epoch(s), s)
+            return jax.lax.while_loop(cond, lambda s: self._epoch(s, P), s)
 
         # Super-epoch fusion: K epochs per while iteration.  Each inner step
         # re-checks liveness and is an exact no-op (lax.cond identity) once
@@ -675,7 +742,7 @@ class Simulation:
         def body(s):
             def step(s, _):
                 s = jax.lax.cond(self._live(s, until, max_epochs),
-                                 self._epoch, lambda x: x, s)
+                                 lambda x: self._epoch(x, P), lambda x: x, s)
                 return s, None
             s, _ = jax.lax.scan(step, s, None, length=self.super_epoch,
                                 unroll=True)
@@ -684,12 +751,18 @@ class Simulation:
         return jax.lax.while_loop(cond, body, s)
 
     def run(self, state: SimState, until: float,
-            max_epochs: int = 2_000_000) -> SimState:
+            max_epochs: int = 2_000_000,
+            params: SimParams | None = None) -> SimState:
         """Advance the simulation to virtual time ``until`` (cycles).
 
         When the simulation was built with ``donate=True`` (the default),
         ``state``'s buffers are donated to the jitted loop and must not be
         reused afterwards — keep using the *returned* state, or pass
-        ``copy_state(state)`` if the input must survive."""
+        ``copy_state(state)`` if the input must survive.
+
+        ``params`` (optional) overrides the traced timing/model parameters
+        for this run (see :class:`SimParams` / ``default_params()``); its
+        leaves are never donated.  ``None`` runs the build-time defaults."""
         assert until < 2 ** 24, "float32 cycle precision bound (DESIGN.md)"
-        return self._run_jit(state, until, max_epochs=max_epochs)
+        return self._run_jit(state, until, max_epochs=max_epochs,
+                             params=params)

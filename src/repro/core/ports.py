@@ -31,6 +31,29 @@ from .message import MSG_WORDS, W_DST, W_SRC, W_TIME, i2f
 EPS = 1e-3
 
 
+def oh_set(arr, ix, val, when=True):
+    """Scatter-free ``arr.at[ix].set(val)`` for a *traced* index on a tiny
+    leading axis: a one-hot compare over ``axis 0`` plus a masked select.
+
+    ``x.at[traced_ix].set(v)`` lowers to an XLA scatter, which under the
+    instance/config vmaps can survive into compiled code — and on CPU XLA a
+    scatter costs ~100x the equivalent select at these sizes
+    (ENGINE_PERF.md).  Component ``tick_fn``s should use this helper for
+    dynamic single-row updates of small state tables (cache tag arrays,
+    register scoreboards, ...); for in-range indices the values are
+    bit-identical to ``.at[].set``.  Out-of-range indices are *dropped*
+    (no row matches the one-hot), unlike ``.at[].set``'s clamp-and-write —
+    which makes a past-the-end index a safe "no update" sentinel.
+
+    ``when=False`` makes the call a no-op (keeps the progress=False
+    "unchanged state" contract easy to honor).
+    """
+    oh = jnp.arange(arr.shape[0]) == ix
+    oh = oh & jnp.asarray(when, bool)
+    oh = oh.reshape((arr.shape[0],) + (1,) * (arr.ndim - 1))
+    return jnp.where(oh, jnp.asarray(val, arr.dtype), arr)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Ports:

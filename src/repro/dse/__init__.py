@@ -1,0 +1,29 @@
+"""repro.dse — batched design-space exploration over the Akita engine.
+
+Architectural research is mostly parameter sweeps.  The engine splits a
+simulation's *structure* (build-time constant) from its traced
+:class:`~repro.core.SimParams` (connection latencies, tick periods, opt-in
+per-kind model params — see DSE.md); this package turns that split into a
+sweep subsystem:
+
+  * :mod:`~repro.dse.sweep`  — ``SweepSpec`` (grid / random / explicit
+    design points, traced + ``static.*`` axes) and param-batch stacking;
+  * :mod:`~repro.dse.runner` — ``BatchRunner`` / ``run_sweep``: one jitted
+    ``vmap`` of the fused hot loop simulates hundreds of configs at once
+    (chunked for B >> memory, optionally pmapped over devices);
+  * :mod:`~repro.dse.report` — tidy rows, Pareto-front extraction and
+    JSON/CSV export.
+
+A singleton batch is bit-identical to the unbatched engine — the
+invariant that makes sweep results trustworthy (tests/dse).
+"""
+from .report import format_table, pareto_front, tidy, to_csv, to_json
+from .runner import (BatchRunner, default_extract, lane, run_sweep,
+                     stack_states)
+from .sweep import SweepSpec, apply_point, build_param_batch, stack_params
+
+__all__ = [
+    "SweepSpec", "apply_point", "build_param_batch", "stack_params",
+    "BatchRunner", "run_sweep", "stack_states", "lane", "default_extract",
+    "pareto_front", "tidy", "to_csv", "to_json", "format_table",
+]

@@ -1,0 +1,95 @@
+"""Sweep result reporting: tidy tables, Pareto fronts, JSON/CSV export.
+
+Rows are plain dicts (one per design point, axes merged with extracted
+stats — the output of ``runner.run_sweep``), so everything here is
+host-side bookkeeping over scalars.
+"""
+from __future__ import annotations
+
+import csv
+import json
+from typing import Iterable, Mapping, Sequence
+
+MIN, MAX = "min", "max"
+
+
+def _as_scalar(v):
+    try:
+        f = float(v)
+        return int(f) if f.is_integer() else f
+    except (TypeError, ValueError):
+        return v
+
+
+def tidy(rows: Iterable[Mapping]) -> list[dict]:
+    """Normalize rows: plain python scalars, union of keys, stable order."""
+    rows = [dict(r) for r in rows]
+    keys: list[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    return [{k: _as_scalar(r.get(k)) for k in keys} for r in rows]
+
+
+def pareto_front(rows: Sequence[Mapping],
+                 objectives: Mapping[str, str]) -> list[dict]:
+    """Non-dominated rows under ``objectives`` ({column: 'min'|'max'}).
+
+    A row is dominated when some other row is at least as good on every
+    objective and strictly better on one.  Ties/duplicates keep the first
+    occurrence.  Rows are returned in input order.
+    """
+    assert objectives and all(d in (MIN, MAX) for d in objectives.values())
+
+    def score(r):
+        # canonical "higher is better" vector
+        return tuple((1.0 if d == MAX else -1.0) * float(r[c])
+                     for c, d in objectives.items())
+
+    scored = [(score(r), i) for i, r in enumerate(rows)]
+    front = []
+    for s, i in scored:
+        dominated = any(
+            all(o >= v for o, v in zip(os, s))
+            and any(o > v for o, v in zip(os, s))
+            for os, j in scored if j != i)
+        duplicate = any(os == s for os, j in front)
+        if not dominated and not duplicate:
+            front.append((s, i))
+    return [dict(rows[i]) for _, i in front]
+
+
+def to_json(rows: Iterable[Mapping], path: str) -> None:
+    with open(path, "w") as fh:
+        json.dump(tidy(rows), fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def to_csv(rows: Iterable[Mapping], path: str) -> None:
+    rows = tidy(rows)
+    if not rows:
+        open(path, "w").close()
+        return
+    with open(path, "w", newline="") as fh:
+        w = csv.DictWriter(fh, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+
+def format_table(rows: Sequence[Mapping], floatfmt: str = "{:.4g}") -> str:
+    """Fixed-width text table (for example scripts / logs)."""
+    rows = tidy(rows)
+    if not rows:
+        return "(no rows)"
+    cols = list(rows[0])
+    cells = [[c for c in cols]]
+    for r in rows:
+        cells.append([
+            floatfmt.format(r[c]) if isinstance(r[c], float) else str(r[c])
+            for c in cols])
+    widths = [max(len(row[j]) for row in cells) for j in range(len(cols))]
+    lines = ["  ".join(c.rjust(w) for c, w in zip(row, widths))
+             for row in cells]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)

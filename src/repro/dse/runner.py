@@ -1,0 +1,181 @@
+"""Batched design-space execution: vmap the engine's fused hot loop over a
+stacked :class:`~repro.core.SimParams` batch.
+
+One jitted program simulates every design point of a topology at once:
+``jax.vmap`` maps the ``while_loop`` body over the config axis (lanes whose
+horizon/workload is exhausted are frozen by the loop's batching rule, so a
+B=1 batch is *bit-identical* to the unbatched engine — the invariant pinned
+by ``tests/dse``).  Params enter the loop as broadcast operands only, so
+the scatter-free hot-loop property (ENGINE_PERF.md) survives batching.
+
+Execution knobs:
+
+* **Chunking** — ``chunk=`` splits B into fixed-size slabs so B >> memory
+  (or >> useful vector width) still runs; every slab reuses the same
+  compiled program (the last one is padded, padding lanes discarded).
+* **Sharding** — ``shard=True`` pmaps the chunk over local devices (the
+  config axis is embarrassingly parallel); with one device this is the
+  plain vmap path.  Multi-host sharding is future work (ROADMAP).
+* **Donation** — batched states are donated into the loop exactly like the
+  unbatched engine (build knob ``donate=``); ``stack_states`` materializes
+  fresh per-lane copies so no lane aliases another lane or the template
+  state (donating an aliased batch would corrupt sibling configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SimParams, SimState, Stats
+
+from .sweep import SweepSpec, build_param_batch
+
+
+def stack_states(state: SimState, n: int) -> SimState:
+    """``n`` independent copies of ``state`` stacked on a new leading axis.
+
+    ``jnp.stack`` materializes one fresh buffer per leaf — lanes never
+    alias each other or the input, so the result is safe to donate while
+    ``state`` stays reusable as a template.
+    """
+    return jax.tree.map(lambda x: jnp.stack([x] * n), state)
+
+
+def lane(tree, i: int):
+    """Extract config ``i``'s slice from a batched pytree (host-side)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def default_extract(sim, s: SimState) -> dict:
+    """Per-config scalar results: virtual time + engine counters."""
+    return {
+        "virtual_time": float(s.time),
+        "epochs": int(s.stats.epochs),
+        "ticks": int(s.stats.ticks),
+        "progress_ticks": int(s.stats.progress_ticks),
+        "delivered": int(s.stats.delivered),
+    }
+
+
+class BatchRunner:
+    """Compiled batched runs over one :class:`Simulation`'s design space.
+
+    Jitted executables are cached per (batch size, max_epochs, shard)
+    triple, so chunked sweeps and repeated calls never recompile.
+    """
+
+    def __init__(self, sim):
+        self.sim = sim
+        self._fns: dict[tuple, Callable] = {}
+
+    # ------------------------------------------------------------------
+    def _batched_fn(self, b: int, max_epochs: int, shard: bool):
+        key = (b, max_epochs, shard)
+        fn = self._fns.get(key)
+        if fn is not None:
+            return fn
+        sim = self.sim
+
+        def one(s, p, u):
+            return sim._run(s, u, max_epochs, params=p)
+
+        vm = jax.vmap(one, in_axes=(0, 0, None))
+        if shard and jax.local_device_count() > 1:
+            d = jax.local_device_count()
+            while b % d:
+                d -= 1            # largest divisor of B we can pmap over
+
+            pm = jax.pmap(vm, in_axes=(0, 0, None),
+                          donate_argnums=(0,) if sim.donate else ())
+
+            def fn(sb, pb, u, d=d):
+                # the per-device reshaped copy is what gets donated here —
+                # callers must still treat sb as consumed, but its leaves
+                # may not be observably deleted on the pmap path
+                fold = lambda x: x.reshape((d, b // d) + x.shape[1:])
+                unfold = lambda x: x.reshape((b,) + x.shape[2:])
+                out = pm(jax.tree.map(fold, sb), jax.tree.map(fold, pb), u)
+                return jax.tree.map(unfold, out)
+        else:
+            fn = jax.jit(
+                vm, donate_argnums=(0,) if sim.donate else ())
+        self._fns[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    def run_batch(self, states_b: SimState, params_b: SimParams,
+                  until: float, max_epochs: int = 2_000_000,
+                  shard: bool = False) -> SimState:
+        """One vmapped jitted run of a pre-stacked batch.
+
+        ``states_b`` is donated when the simulation was built with
+        ``donate=True`` — treat it as consumed (see ``stack_states`` /
+        ``Simulation.copy_state``).
+        """
+        b = int(params_b.conn_latency.shape[0])
+        fn = self._batched_fn(b, max_epochs, shard)
+        return fn(states_b, params_b, jnp.float32(until))
+
+    # ------------------------------------------------------------------
+    def run_chunked(self, template: SimState, params_b: SimParams,
+                    until: float, chunk: int | None = None,
+                    max_epochs: int = 2_000_000,
+                    shard: bool = False) -> SimState:
+        """Run a B-point batch in fixed-size chunks of fresh state stacks.
+
+        All chunks share one compiled executable; the final partial chunk
+        is padded by repeating its last point and the padding lanes are
+        dropped from the result.  Returns the stacked final states in
+        point order.
+        """
+        B = int(params_b.conn_latency.shape[0])
+        chunk = B if chunk is None else max(1, min(int(chunk), B))
+        outs = []
+        for lo in range(0, B, chunk):
+            hi = min(lo + chunk, B)
+            part = jax.tree.map(lambda x: x[lo:hi], params_b)
+            if hi - lo < chunk:   # pad: repeat the last point
+                pad = chunk - (hi - lo)
+                part = jax.tree.map(
+                    lambda x: jnp.concatenate(
+                        [x] + [x[-1:]] * pad), part)
+            sb = stack_states(template, chunk)
+            out = self.run_batch(sb, part, until, max_epochs, shard)
+            if hi - lo < chunk:
+                out = jax.tree.map(lambda x: x[:hi - lo], out)
+            outs.append(out)
+        if len(outs) == 1:
+            return outs[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs), *outs)
+
+
+# ---------------------------------------------------------------------------
+def run_sweep(build_fn: Callable, spec: SweepSpec, until: float,
+              extract: Callable | None = None, chunk: int | None = None,
+              max_epochs: int = 2_000_000, shard: bool = False) -> list[dict]:
+    """Simulate every design point of ``spec`` and return tidy result rows.
+
+    ``build_fn(**static_kwargs) -> (sim, state)`` builds the topology; it
+    is called once per distinct ``static.*`` axis combination (each such
+    group compiles once and vmaps its traced points).  ``extract(sim,
+    final_lane_state) -> dict`` pulls per-config results (default: engine
+    counters).  Rows come back in spec order, each the point's axis
+    assignment merged with its extracted results.
+    """
+    extract = extract or default_extract
+    rows: list[dict | None] = [None] * len(spec)
+    for static_kwargs, indices, traced in spec.split_static():
+        sim, st = build_fn(**static_kwargs)
+        params_b = build_param_batch(sim, traced)
+        runner = BatchRunner(sim)
+        out = runner.run_chunked(st, params_b, until, chunk=chunk,
+                                 max_epochs=max_epochs, shard=shard)
+        out = jax.block_until_ready(out)
+        for j, i in enumerate(indices):
+            row = dict(spec.points[i])
+            row.update(extract(sim, lane(out, j)))
+            rows[i] = row
+    return list(rows)

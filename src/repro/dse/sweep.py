@@ -1,0 +1,186 @@
+"""Sweep specification: design points over a topology's traced params.
+
+A *design point* is a flat dict mapping axis paths to values.  Paths name
+leaves of the engine's :class:`~repro.core.SimParams` pytree (traced —
+hundreds of points share one compiled simulation) or, with the ``static.``
+prefix, keyword arguments of the caller's build function (structural —
+each distinct combination forces a rebuild/compile and forms its own
+vmapped batch):
+
+  ``conn_latency``            all connection latencies (cycles, >= 1)
+  ``conn_latency[i]``         one connection (negative i counts from end)
+  ``period.<kind>``           tick period of every instance of a kind
+  ``period.<kind>[i]``        tick period of one instance
+  ``kind.<kind>.<leaf>``      an opt-in model param (``ComponentKind.params``
+                              pytree; nested dicts use dotted paths)
+  ``static.<kwarg>``          build-function keyword (e.g. super_epoch)
+
+:class:`SweepSpec` holds an ordered tuple of points, constructed by
+``grid`` (cartesian product), ``random`` (uniform/log-uniform/choice
+sampling), or ``explicit``.  ``split_static`` groups points by their
+static-axis assignment so the runner compiles once per group; point order
+within the spec is the canonical result order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import re
+from typing import Any, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SimParams
+
+STATIC_PREFIX = "static."
+
+_INDEXED = re.compile(r"^(?P<base>.*?)\[(?P<ix>-?\d+)\]$")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """An ordered set of design points (dicts of axis path -> value)."""
+
+    points: tuple[dict, ...]
+
+    def __len__(self):
+        return len(self.points)
+
+    def __iter__(self):
+        return iter(self.points)
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def grid(axes: dict[str, Sequence]) -> "SweepSpec":
+        """Cartesian product of the axis value lists (insertion order:
+        last axis varies fastest)."""
+        names = list(axes)
+        combos = itertools.product(*(list(axes[n]) for n in names))
+        return SweepSpec(tuple(dict(zip(names, c)) for c in combos))
+
+    @staticmethod
+    def random(axes: dict[str, Any], n: int, seed: int = 0) -> "SweepSpec":
+        """``n`` points sampled independently per axis.  Axis specs:
+        ``(lo, hi)`` uniform float, ``(lo, hi, 'log')`` log-uniform, or a
+        list/tuple of >2 (or non-numeric) entries = uniform choice."""
+        rng = np.random.default_rng(seed)
+        cols = {}
+        for name, spec in axes.items():
+            spec = tuple(spec)
+            is_range = (len(spec) in (2, 3)
+                        and all(isinstance(v, (int, float))
+                                for v in spec[:2])
+                        and (len(spec) == 2 or spec[2] == "log"))
+            if is_range:
+                lo, hi = float(spec[0]), float(spec[1])
+                if len(spec) == 3:
+                    cols[name] = list(np.exp(rng.uniform(
+                        np.log(lo), np.log(hi), n)))
+                else:
+                    cols[name] = list(rng.uniform(lo, hi, n))
+            else:
+                cols[name] = [spec[int(i)]
+                              for i in rng.integers(0, len(spec), n)]
+        return SweepSpec(tuple(
+            {name: cols[name][i] for name in axes} for i in range(n)))
+
+    @staticmethod
+    def explicit(points: Iterable[dict]) -> "SweepSpec":
+        return SweepSpec(tuple(dict(p) for p in points))
+
+    # -- static/traced split ----------------------------------------------
+    def split_static(self):
+        """Group points by their ``static.*`` assignment.
+
+        Returns ``[(static_kwargs, indices, traced_points), ...]`` in first-
+        appearance order; ``indices`` map each group's points back to spec
+        order.
+        """
+        groups: dict[tuple, tuple[dict, list, list]] = {}
+        for i, pt in enumerate(self.points):
+            static = {k[len(STATIC_PREFIX):]: v for k, v in pt.items()
+                      if k.startswith(STATIC_PREFIX)}
+            traced = {k: v for k, v in pt.items()
+                      if not k.startswith(STATIC_PREFIX)}
+            key = tuple(sorted(static.items()))
+            if key not in groups:
+                groups[key] = (static, [], [])
+            groups[key][1].append(i)
+            groups[key][2].append(traced)
+        return list(groups.values())
+
+
+# ---------------------------------------------------------------------------
+def _set_indexed(arr, path, ix, value):
+    n = arr.shape[0]
+    assert -n <= ix < n, f"{path}: index {ix} out of range for [{n}]"
+    return arr.at[ix].set(jnp.asarray(value, arr.dtype))
+
+
+def apply_point(params: SimParams, point: dict) -> SimParams:
+    """Return ``params`` with one design point's traced assignments applied.
+
+    Runs at trace-free build time (plain ``.at`` updates on tiny arrays);
+    unknown paths raise ``KeyError`` so typos fail loudly before compile.
+    """
+    conn = params.conn_latency
+    periods = dict(params.periods)
+    kind = {k: v for k, v in params.kind.items()}
+    for path, value in point.items():
+        if path.startswith(STATIC_PREFIX):
+            raise KeyError(f"static axis {path!r} reached apply_point — "
+                           "route points through SweepSpec.split_static")
+        m = _INDEXED.match(path)
+        base, ix = (m["base"], int(m["ix"])) if m else (path, None)
+        if base == "conn_latency":
+            if ix is None:
+                conn = jnp.full_like(conn, float(value))
+            else:
+                conn = _set_indexed(conn, path, ix, value)
+        elif base.startswith("period."):
+            kname = base[len("period."):]
+            if kname not in periods:
+                raise KeyError(f"{path!r}: unknown kind {kname!r} "
+                               f"(have {sorted(periods)})")
+            if ix is None:
+                periods[kname] = jnp.full_like(periods[kname], float(value))
+            else:
+                periods[kname] = _set_indexed(periods[kname], path, ix, value)
+        elif base.startswith("kind."):
+            kname, _, leaf_path = base[len("kind."):].partition(".")
+            if kname not in kind or not leaf_path:
+                raise KeyError(f"{path!r}: unknown kind-param path "
+                               f"(kinds with params: "
+                               f"{sorted(k for k, v in kind.items() if v)})")
+            kind[kname] = _set_leaf(kind[kname], leaf_path.split("."),
+                                    value, path)
+        else:
+            raise KeyError(f"unknown sweep axis {path!r}")
+    return SimParams(conn_latency=conn, periods=periods, kind=kind)
+
+
+def _set_leaf(tree, keys, value, path):
+    if not isinstance(tree, dict) or keys[0] not in tree:
+        raise KeyError(f"{path!r}: no param leaf {'.'.join(keys)!r} "
+                       f"(have {sorted(tree) if isinstance(tree, dict) else tree})")
+    out = dict(tree)
+    if len(keys) == 1:
+        old = out[keys[0]]
+        out[keys[0]] = jnp.asarray(value, jnp.asarray(old).dtype)
+    else:
+        out[keys[0]] = _set_leaf(out[keys[0]], keys[1:], value, path)
+    return out
+
+
+def stack_params(plist: Sequence[SimParams]) -> SimParams:
+    """Stack per-point :class:`SimParams` into one batch (leading axis B)."""
+    assert plist, "empty sweep"
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+
+
+def build_param_batch(sim, points: Sequence[dict]) -> SimParams:
+    """``sim.default_params()`` + each point's assignments, stacked."""
+    base = sim.default_params()
+    return stack_params([apply_point(base, pt) for pt in points])

@@ -12,6 +12,14 @@ Workload patterns mirror the paper's benchmark behaviours:
 
 Opcodes: 1=READ_REQ, 2=READ_RESP, 3=WRITE_REQ (fire-and-forget).
 Payload: p0=address, p1=requester tag.
+
+Sweepable model params (traced; see DSE.md): the ``core`` kind exposes
+``think_scale`` (multiplier on per-core think times) and the ``l1`` kind
+``extra_hit_rate`` (probability of a forced hit on top of the real tag
+match — a stand-in for a bigger/smarter cache).  Both default to values
+that reproduce the unparameterized model bit-for-bit (1.0 / 0.0); DRAM
+service latency sweeps ride the crossbar connection latency and the
+``dram`` kind's tick period.
 """
 from __future__ import annotations
 
@@ -19,14 +27,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (ComponentKind, SimBuilder, TickResult, msg_new,
-                        msg_reply, opcode, payload)
+                        msg_reply, oh_set, opcode, payload)
 from repro.core.pdes import ShardedSim, add_gateway
 
 READ_REQ, READ_RESP, WRITE_REQ = 1, 2, 3
 
+CORE_PARAMS = {"think_scale": jnp.float32(1.0)}
+L1_PARAMS = {"extra_hit_rate": jnp.float32(0.0)}
+
 
 # ---------------------------------------------------------------------------
-def core_tick(state, ports, t):
+def core_tick(state, ports, t, params):
     """Issues reads with think-time compute phases; up to 1 outstanding."""
     progress = jnp.asarray(False)
     # accept response
@@ -47,8 +58,8 @@ def core_tick(state, ports, t):
     state["addr"] = jnp.where(sent, addr_use, state["addr"])
     state["remaining"] = state["remaining"] - si
     state["outstanding"] = state["outstanding"] + si
-    state["next_issue"] = jnp.where(
-        sent, t + state["think"].astype(jnp.float32), state["next_issue"])
+    think = state["think"].astype(jnp.float32) * params["think_scale"]
+    state["next_issue"] = jnp.where(sent, t + think, state["next_issue"])
     progress = progress | sent
     # while computing, fast-forward to the next issue time (event-driven)
     nxt = jnp.where(computing & (state["remaining"] > 0)
@@ -57,7 +68,7 @@ def core_tick(state, ports, t):
     return state, ports, TickResult.make(progress, next_time=nxt)
 
 
-def l1_tick(state, ports, t):
+def l1_tick(state, ports, t, params):
     """Direct-mapped L1; 1 MSHR; port 0 = core side, port 1 = memory side."""
     state = dict(state)
     progress = jnp.asarray(False)
@@ -67,8 +78,7 @@ def l1_tick(state, ports, t):
     rmsg, rgot, ports = ports.recv(1, when=ports.can_send(0))
     addr_r = payload(rmsg, 0)
     set_r = (addr_r // 64) % n_sets
-    state["tags"] = jnp.where(
-        rgot, state["tags"].at[set_r].set(addr_r // 64), state["tags"])
+    state["tags"] = oh_set(state["tags"], set_r, addr_r // 64, when=rgot)
     # reply to the core (port 0's paired peer), NOT to the fill's sender
     ports, _ = ports.send(0, msg_new(READ_RESP, p0=addr_r,
                                      p1=payload(rmsg, 1)), when=rgot)
@@ -81,7 +91,12 @@ def l1_tick(state, ports, t):
     msg, got = ports.peek(0)
     addr = payload(msg, 0)
     set_i = (addr // 64) % n_sets
-    hit = state["tags"][set_i] == addr // 64
+    # forced probabilistic hit (address-hashed, deterministic): models a
+    # larger/associative cache without simulating one; rate 0 == pure tags
+    hmix = (addr * 1103515245 + 12345) & 0x7FFFFFFF
+    forced = hmix.astype(jnp.float32) < \
+        params["extra_hit_rate"] * jnp.float32(2147483648.0)
+    hit = (state["tags"][set_i] == addr // 64) | forced
     accept = got & jnp.where(hit, can_hit_path, can_miss_path)
     _, _, ports = ports.recv(0, when=accept)
     ports, _ = ports.send(0, msg_reply(msg, READ_RESP, p0=addr,
@@ -135,7 +150,8 @@ def build_memsys(n_cores: int = 8, pattern: str = "mixed",
                  n_reqs: int = 64, dram_latency: float = 30.0,
                  naive: bool = False, seed: int = 0,
                  sample_period: float = 0.0, private_dram: bool = False,
-                 super_epoch: int | None = None, donate: bool = True):
+                 super_epoch: int | None = None, donate: bool = True,
+                 dram_period: float = 1.0):
     rng = np.random.default_rng(seed)
     remaining, think, seq = _workload(pattern, n_cores, n_reqs, rng)
     b = SimBuilder()
@@ -147,18 +163,23 @@ def build_memsys(n_cores: int = 8, pattern: str = "mixed",
          "seq": jnp.asarray(seq),
          "think": jnp.asarray(think),
          "tag": jnp.arange(n_cores, dtype=jnp.int32),
-         "next_issue": jnp.zeros(n_cores, jnp.float32)}, cap=2))
+         "next_issue": jnp.zeros(n_cores, jnp.float32)}, cap=2,
+        params=CORE_PARAMS))
     n_sets = 64
     l1 = b.add_kind(ComponentKind(
         "l1", l1_tick, n_cores, 2,
         {"tags": jnp.full((n_cores, n_sets), -1, jnp.int32),
          "mshr_busy": jnp.zeros(n_cores, jnp.int32),
          "hits": jnp.zeros(n_cores, jnp.int32),
-         "misses": jnp.zeros(n_cores, jnp.int32)}, cap=2))
+         "misses": jnp.zeros(n_cores, jnp.int32)}, cap=2,
+        params=L1_PARAMS))
     n_dram = n_cores if private_dram else 1
+    # dram_period is the service interval (one request per tick): the
+    # static default of the sweepable ``period.dram`` axis
     dram = b.add_kind(ComponentKind(
         "dram", dram_tick, n_dram, 1,
-        {"served": jnp.zeros(n_dram, jnp.int32)}, cap=4))
+        {"served": jnp.zeros(n_dram, jnp.int32)}, cap=4,
+        period=dram_period))
     for i in range(n_cores):
         b.connect([cores.port(i, 0), l1.port(i, 0)], latency=1.0)
     if private_dram:
@@ -208,10 +229,11 @@ def _patch_dsts(sim, st, n_cores):
 
 def build(n_cores=8, pattern="mixed", n_reqs=64, naive=False, seed=0,
           dram_latency=30.0, sample_period=0.0, private_dram=False,
-          super_epoch=None, donate=True):
+          super_epoch=None, donate=True, dram_period=1.0):
     sim, st = build_memsys(n_cores, pattern, n_reqs, dram_latency, naive,
                            seed, sample_period, private_dram,
-                           super_epoch=super_epoch, donate=donate)
+                           super_epoch=super_epoch, donate=donate,
+                           dram_period=dram_period)
     if private_dram:
         return sim, st          # 1:1 links use default peers
     return _patch_dsts(sim, st, n_cores)
@@ -252,13 +274,15 @@ def build_sharded_memsys(mesh=None, n_shards: int = 1,
                                  jnp.int32),
              "seq": jnp.asarray(seq), "think": jnp.asarray(think),
              "tag": jnp.arange(n_cores, dtype=jnp.int32),
-             "next_issue": jnp.zeros(n_cores, jnp.float32)}, cap=2))
+             "next_issue": jnp.zeros(n_cores, jnp.float32)}, cap=2,
+            params=CORE_PARAMS))
         l1 = b.add_kind(ComponentKind(
             "l1", l1_tick, n_cores, 2,
             {"tags": jnp.full((n_cores, 64), -1, jnp.int32),
              "mshr_busy": jnp.zeros(n_cores, jnp.int32),
              "hits": jnp.zeros(n_cores, jnp.int32),
-             "misses": jnp.zeros(n_cores, jnp.int32)}, cap=2))
+             "misses": jnp.zeros(n_cores, jnp.int32)}, cap=2,
+            params=L1_PARAMS))
         dram = b.add_kind(ComponentKind(
             "dram", dram_tick, 1, 2, {"served": jnp.zeros(1, jnp.int32)},
             cap=8))

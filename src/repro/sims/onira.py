@@ -19,20 +19,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (ComponentKind, SimBuilder, TickResult, msg_new,
-                        msg_reply, payload)
+                        msg_reply, oh_set, payload)
 
 ADDI, LOAD, STORE, BNEZ, HALT = 1, 2, 3, 4, 5
 MAXI = 128
 
+# Sweepable CPU timing params (traced; DSE.md): the taken-branch flush
+# penalty in cycles.  Memory latency sweeps ride the cpu<->mem connection
+# latency axis.  Defaults reproduce the unparameterized model bit-for-bit.
+CPU_PARAMS = {"flush_cycles": jnp.float32(3.0)}
 
-def cpu_tick(state, ports, t):
+
+def cpu_tick(state, ports, t, params):
     state = dict(state)
     progress = jnp.asarray(False)
     # load response: p1 = destination register
     msg, got, ports = ports.recv(0)
     reg = payload(msg, 1)
-    state["busy"] = jnp.where(got, state["busy"].at[reg].set(0),
-                              state["busy"])
+    state["busy"] = oh_set(state["busy"], reg, 0, when=got)
     state["pending"] = state["pending"] - got.astype(jnp.int32)
     progress = progress | got
 
@@ -48,16 +52,14 @@ def cpu_tick(state, ports, t):
 
     # ALU
     do_alu = can_issue & (op == ADDI) & ~src_busy
-    state["regs"] = jnp.where(
-        do_alu, state["regs"].at[rd].set(state["regs"][rs1] + imm),
-        state["regs"])
+    state["regs"] = oh_set(state["regs"], rd, state["regs"][rs1] + imm,
+                           when=do_alu)
     # LOAD
     can_load = can_issue & (op == LOAD) & ~src_busy & \
         (state["pending"] < 4) & ports.can_send(0)
     ports, sent_l = ports.send(
         0, msg_new(1, p0=state["regs"][rs1], p1=rd), when=can_load)
-    state["busy"] = jnp.where(sent_l, state["busy"].at[rd].set(1),
-                              state["busy"])
+    state["busy"] = oh_set(state["busy"], rd, 1, when=sent_l)
     state["pending"] = state["pending"] + sent_l.astype(jnp.int32)
     # STORE (fire-and-forget, but bounded by buffer space)
     can_store = can_issue & (op == STORE) & ~src_busy & ~dst_busy & \
@@ -76,7 +78,8 @@ def cpu_tick(state, ports, t):
     state["pc"] = jnp.where(
         issued, jnp.where(taken, pc + imm, pc + 1), state["pc"])
     state["retired"] = state["retired"] + issued.astype(jnp.int32)
-    state["stall_until"] = jnp.where(taken, t + 3.0, state["stall_until"])
+    state["stall_until"] = jnp.where(taken, t + params["flush_cycles"],
+                                     state["stall_until"])
     # load-use stall bookkeeping (pure accounting)
     state["stalls"] = state["stalls"] + \
         (can_issue & ~issued).astype(jnp.int32)
@@ -183,7 +186,8 @@ def build_onira(progs: list[np.ndarray], mem_latency: float = 5.0,
          "stalls": jnp.zeros(n, jnp.int32),
          "done": jnp.zeros(n, jnp.int32),
          "halt_time": jnp.zeros(n, jnp.float32),
-         "stall_until": jnp.zeros(n, jnp.float32)}, cap=4))
+         "stall_until": jnp.zeros(n, jnp.float32)}, cap=4,
+        params=CPU_PARAMS))
     mem = b.add_kind(ComponentKind(
         "mem", mem_tick, n, 1, {"served": jnp.zeros(n, jnp.int32)}, cap=4))
     for i in range(n):

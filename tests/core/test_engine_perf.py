@@ -95,3 +95,32 @@ def test_no_donate_build_keeps_input_reusable():
     assert not st.next_tick.is_deleted()
     out2 = sim.run(st, until=5000.0)          # same input, second run
     _assert_states_identical(out, out2)
+
+
+def test_set_default_peers_after_warmed_up_run():
+    """``set_default_peers`` must take effect even after the jitted run has
+    already been traced and executed (the re-wrap discards traces that baked
+    the old peer constants)."""
+    from repro.sims.memsys import build_memsys, finish_stats
+
+    n = 3
+    sim, st = build_memsys(n_cores=n, pattern="stream", n_reqs=6,
+                           donate=False)
+    # warm the jit with the *unpatched* peers: on the multi-member crossbar
+    # the l1 memory ports have no default peer, so misses are never
+    # addressed to the DRAM and the workload stalls
+    warm = sim.run(st, until=20000.0)
+    assert finish_stats(sim, warm)["remaining"] > 0
+
+    # rewrite the default peers on the warmed-up simulation...
+    dram_pid = sim.port_id("dram", 0, 0)
+    sim.set_default_peers(
+        {sim.port_id("l1", i, 1): dram_pid for i in range(n)})
+    out = sim.run(st, until=20000.0)
+
+    # ...and the rerun must be bit-identical to a freshly patched build
+    ref_sim, ref_st = build(n_cores=n, pattern="stream", n_reqs=6,
+                            donate=False)
+    ref = ref_sim.run(ref_st, until=20000.0)
+    _assert_states_identical(out, ref)
+    assert finish_stats(sim, out)["remaining"] == 0

@@ -1,0 +1,96 @@
+"""Singleton-batch equivalence: a B=1 ``repro.dse`` run must reproduce the
+unbatched engine bit-for-bit (stat_err exactly 0) — the invariant that
+makes batched sweep results trustworthy.  Pinned on all five memsys
+workload patterns and the onira CPI benchmark, for default and overridden
+params alike; plus: explicitly passing ``default_params()`` must match the
+``params=None`` constant-baked path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.dse import BatchRunner, build_param_batch, lane, stack_states
+from repro.sims import onira
+from repro.sims.memsys import build, finish_stats
+
+PATTERNS = ["compute", "stream", "pointer", "idle_half", "mixed"]
+STAT_FIELDS = ("epochs", "ticks", "progress_ticks", "delivered")
+
+
+def assert_states_identical(a, b):
+    assert float(a.time) == float(b.time)
+    for f in STAT_FIELDS:
+        assert int(getattr(a.stats, f)) == int(getattr(b.stats, f)), f
+    np.testing.assert_array_equal(np.asarray(a.stats.busy),
+                                  np.asarray(b.stats.busy))
+    np.testing.assert_array_equal(np.asarray(a.next_tick),
+                                  np.asarray(b.next_tick))
+    for kname in a.comp_state:
+        for la, lb in zip(jax.tree.leaves(a.comp_state[kname]),
+                          jax.tree.leaves(b.comp_state[kname])):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for seg_a, seg_b in ((a.in_cnt, b.in_cnt), (a.out_cnt, b.out_cnt),
+                         (a.in_buf, b.in_buf), (a.out_buf, b.out_buf)):
+        for kname in seg_a:
+            np.testing.assert_array_equal(np.asarray(seg_a[kname]),
+                                          np.asarray(seg_b[kname]))
+
+
+def singleton(sim, st, until, point):
+    out_b = BatchRunner(sim).run_batch(
+        stack_states(st, 1), build_param_batch(sim, [point]), until)
+    return lane(out_b, 0)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_memsys_singleton_matches_unbatched(pattern):
+    sim, st = build(n_cores=4, pattern=pattern, n_reqs=12, donate=False)
+    ref = sim.run(st, until=20000.0)
+    out = singleton(sim, st, 20000.0, {})
+    assert_states_identical(out, ref)
+    assert finish_stats(sim, out)["remaining"] == 0   # not vacuous
+
+
+def test_memsys_singleton_matches_unbatched_with_overrides():
+    point = {"conn_latency[-1]": 17.0, "kind.l1.extra_hit_rate": 0.35,
+             "period.dram": 2.0}
+    sim, st = build(n_cores=4, pattern="mixed", n_reqs=12, donate=False)
+    params = build_param_batch(sim, [point])
+    ref = sim.run(st, until=20000.0, params=lane(params, 0))
+    assert_states_identical(singleton(sim, st, 20000.0, point), ref)
+
+
+def test_explicit_default_params_match_constant_baked_path():
+    sim, st = build(n_cores=4, pattern="mixed", n_reqs=12, donate=False)
+    baked = sim.run(st, until=20000.0)                       # params=None
+    explicit = sim.run(st, until=20000.0, params=sim.default_params())
+    assert_states_identical(explicit, baked)
+
+
+def test_onira_cpi_singleton_matches_unbatched():
+    names = list(onira.MICROBENCHES)
+    progs = [onira.MICROBENCHES[n]() for n in names]
+    sim, st = onira.build_onira(progs, mem_latency=5.0)
+    ref = sim.run(sim.copy_state(st), until=20000.0)
+    out = singleton(sim, st, 20000.0, {})
+    assert_states_identical(out, ref)
+    cs = np.asarray(out.comp_state["cpu"]["done"])
+    assert cs.all()                                          # all halted
+    # and the CPI values still track the analytic pipeline model
+    retired = np.asarray(out.comp_state["cpu"]["retired"], np.float64)
+    halt = np.asarray(out.comp_state["cpu"]["halt_time"], np.float64)
+    for i, n in enumerate(names):
+        cpi = halt[i] / max(retired[i], 1)
+        ref_cpi = onira.analytic_cpi(n)
+        assert abs(cpi - ref_cpi) / ref_cpi < 0.35, (n, cpi, ref_cpi)
+
+
+def test_onira_flush_cycles_sweep_moves_cpi():
+    progs = [onira.prog_br_loop(iters=16, body_n=4)]
+    sim, st = onira.build_onira(progs, mem_latency=5.0)
+    runner = BatchRunner(sim)
+    pb = build_param_batch(sim, [{"kind.cpu.flush_cycles": v}
+                                 for v in (3.0, 9.0)])
+    out = runner.run_batch(stack_states(st, 2), pb, 20000.0)
+    halt = np.asarray(out.comp_state["cpu"]["halt_time"])[:, 0]
+    assert halt[1] > halt[0]      # costlier flush -> slower loop

@@ -1,0 +1,59 @@
+"""Report helpers: tidy rows, Pareto-front extraction, JSON/CSV export."""
+import csv
+import json
+
+import pytest
+
+from repro.dse import format_table, pareto_front, tidy, to_csv, to_json
+
+ROWS = [
+    {"lat": 10.0, "hit": 0.0, "time": 500.0},
+    {"lat": 10.0, "hit": 0.8, "time": 200.0},
+    {"lat": 40.0, "hit": 0.0, "time": 900.0},
+    {"lat": 40.0, "hit": 0.8, "time": 350.0},
+]
+
+
+def test_pareto_front_min_time_max_lat_min_hit():
+    # cheaper memory (higher lat) and smaller cache (lower hit) trade
+    # against runtime: only the all-worse point is dominated
+    front = pareto_front(ROWS, {"time": "min", "lat": "max", "hit": "min"})
+    assert ROWS[0] in front and ROWS[1] in front and ROWS[3] in front
+    # (lat=40, hit=0.8) beats nothing? it's the only lat-40 cheap-time point
+    assert len(front) == 4 or ROWS[2] in front  # row2: worst time, best hit
+    # single objective: unique minimum
+    front_t = pareto_front(ROWS, {"time": "min"})
+    assert front_t == [ROWS[1]]
+
+
+def test_pareto_front_drops_dominated_and_duplicate_rows():
+    rows = [{"a": 1.0, "b": 1.0}, {"a": 2.0, "b": 2.0},  # dominated
+            {"a": 1.0, "b": 1.0}]                        # duplicate
+    front = pareto_front(rows, {"a": "min", "b": "min"})
+    assert front == [{"a": 1.0, "b": 1.0}]
+
+
+def test_tidy_unions_keys_and_coerces_scalars():
+    import numpy as np
+    rows = [{"a": np.float32(1.5)}, {"a": 2, "b": np.int32(7)}]
+    t = tidy(rows)
+    assert t == [{"a": 1.5, "b": None}, {"a": 2, "b": 7}]
+    assert isinstance(t[0]["a"], float) and isinstance(t[1]["b"], int)
+
+
+def test_json_and_csv_roundtrip(tmp_path):
+    jp, cp = tmp_path / "r.json", tmp_path / "r.csv"
+    to_json(ROWS, str(jp))
+    assert json.loads(jp.read_text()) == tidy(ROWS)
+    to_csv(ROWS, str(cp))
+    with open(cp) as fh:
+        back = list(csv.DictReader(fh))
+    assert [float(r["time"]) for r in back] == [r["time"] for r in ROWS]
+
+
+def test_format_table_lines_up():
+    txt = format_table(ROWS)
+    lines = txt.splitlines()
+    assert lines[0].split() == ["lat", "hit", "time"]
+    assert len(lines) == 2 + len(ROWS)
+    assert len({len(ln) for ln in lines}) == 1   # fixed width

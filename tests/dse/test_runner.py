@@ -1,0 +1,145 @@
+"""BatchRunner execution semantics: chunking, sharding, and the
+donation/aliasing contract for batched states (a donated batch must never
+alias across configs or with the template state)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dse import (BatchRunner, SweepSpec, build_param_batch, lane,
+                       run_sweep, stack_states)
+from repro.sims.memsys import build, finish_stats
+
+POINTS = [{"conn_latency[-1]": float(v)} for v in (10, 20, 30, 40, 50)]
+
+
+def _build(**kw):
+    return build(n_cores=3, pattern="mixed", n_reqs=6, **kw)
+
+
+def test_chunked_equals_unchunked_including_padded_tail():
+    sim, st = _build(donate=False)
+    pb = build_param_batch(sim, POINTS)                     # B=5
+    runner = BatchRunner(sim)
+    whole = runner.run_chunked(st, pb, until=20000.0)       # one chunk
+    split = runner.run_chunked(st, pb, until=20000.0, chunk=2)  # 2+2+pad
+    for a, b in zip(jax.tree.leaves(whole), jax.tree.leaves(split)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shard_flag_runs_and_matches_plain_vmap():
+    sim, st = _build(donate=False)
+    pb = build_param_batch(sim, POINTS[:4])
+    runner = BatchRunner(sim)
+    plain = runner.run_batch(stack_states(st, 4), pb, 20000.0)
+    shard = runner.run_batch(stack_states(st, 4), pb, 20000.0, shard=True)
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(shard)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_shard_pmaps_over_multiple_devices():
+    """The pmap path (only reachable with >1 device, hence the subprocess
+    with forced host devices) must match plain vmap bit-for-bit."""
+    root = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import jax, numpy as np
+        assert jax.local_device_count() == 2
+        from repro.dse import BatchRunner, build_param_batch, stack_states
+        from repro.sims.memsys import build
+        sim, st = build(n_cores=2, pattern="mixed", n_reqs=6, donate=False)
+        pb = build_param_batch(
+            sim, [{"conn_latency[-1]": float(v)} for v in (10, 20, 30, 40)])
+        r = BatchRunner(sim)
+        plain = r.run_batch(stack_states(st, 4), pb, 20000.0)
+        shard = r.run_batch(stack_states(st, 4), pb, 20000.0, shard=True)
+        for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(shard)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("OK")
+    """)], capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# satellite: copy_state / donate=False interplay with vmapped batched runs
+# ---------------------------------------------------------------------------
+def test_stack_states_does_not_alias_template_or_lanes():
+    sim, st = _build(donate=True)
+    sb = stack_states(st, 3)
+    pb = build_param_batch(sim, POINTS[:3])
+    out = BatchRunner(sim).run_batch(sb, pb, 20000.0)
+    # batch was donated...
+    assert sb.next_tick.is_deleted()
+    assert all(v.is_deleted() for v in sb.in_buf.values())
+    # ...but the template survives and is itself still runnable
+    assert not st.next_tick.is_deleted()
+    assert all(not v.is_deleted() for v in st.in_buf.values())
+    ref = sim.run(st, until=20000.0)     # donates st; out must be unaffected
+    assert float(ref.time) > 0.0
+    # distinct params produced distinct lanes (no cross-config aliasing)
+    times = [float(lane(out, i).time) for i in range(3)]
+    assert len(set(times)) == 3, times
+
+
+def test_identical_lanes_stay_bitwise_identical():
+    sim, st = _build(donate=True)
+    pb = build_param_batch(sim, [{}, {}])       # same config twice
+    out = BatchRunner(sim).run_batch(stack_states(st, 2), pb, 20000.0)
+    for leaf in jax.tree.leaves(out):
+        a = np.asarray(leaf)
+        np.testing.assert_array_equal(a[0], a[1])
+
+
+def test_copy_state_makes_batched_input_survive_donation():
+    sim, st = _build(donate=True)
+    runner = BatchRunner(sim)
+    pb = build_param_batch(sim, POINTS[:2])
+    sb = stack_states(st, 2)
+    keep = sim.copy_state(sb)                   # batched deep copy
+    out1 = runner.run_batch(sb, pb, 20000.0)
+    assert sb.next_tick.is_deleted()
+    assert not keep.next_tick.is_deleted()
+    out2 = runner.run_batch(keep, pb, 20000.0)  # replay from the copy
+    for a, b in zip(jax.tree.leaves(out1), jax.tree.leaves(out2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_donate_false_build_keeps_batched_input_reusable():
+    sim, st = _build(donate=False)
+    runner = BatchRunner(sim)
+    pb = build_param_batch(sim, POINTS[:2])
+    sb = stack_states(st, 2)
+    out1 = runner.run_batch(sb, pb, 20000.0)
+    assert not sb.next_tick.is_deleted()
+    out2 = runner.run_batch(sb, pb, 20000.0)    # same input, second run
+    for a, b in zip(jax.tree.leaves(out1), jax.tree.leaves(out2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+def test_run_sweep_rows_in_spec_order_across_static_groups():
+    spec = SweepSpec.grid({"conn_latency[-1]": [10.0, 40.0],
+                           "static.super_epoch": [1, 4]})
+
+    def extract(sim, s):
+        return {"virtual_time": float(s.time),
+                "remaining": finish_stats(sim, s)["remaining"]}
+
+    rows = run_sweep(lambda **kw: _build(donate=True, **kw), spec,
+                     until=20000.0, extract=extract)
+    assert [r["conn_latency[-1]"] for r in rows] == [10.0, 10.0, 40.0, 40.0]
+    assert [r["static.super_epoch"] for r in rows] == [1, 4, 1, 4]
+    assert all(r["remaining"] == 0 for r in rows)
+    # super_epoch is an observation-invariant perf knob; latency is not
+    assert rows[0]["virtual_time"] == rows[1]["virtual_time"]
+    assert rows[2]["virtual_time"] == rows[3]["virtual_time"]
+    assert rows[2]["virtual_time"] > rows[0]["virtual_time"]

@@ -1,0 +1,67 @@
+"""The hot loop must stay scatter-free with params traced and batched.
+
+On CPU XLA a scatter costs ~two orders of magnitude more than the
+equivalent take/select (ENGINE_PERF.md); the engine's delivery/tick phases
+are formulated to avoid them, and SimParams enter as broadcast operands
+only.  Asserted on the *optimized* HLO (where XLA has already rewritten
+constant-index ``.at[].set`` updates into dynamic-update-slices): neither
+the batched epoch nor the full batched while-loop run may contain a
+scatter op.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dse import build_param_batch, stack_states
+from repro.sims import onira
+from repro.sims.memsys import build
+
+B = 4
+
+
+def _scatters(hlo_text: str) -> list[str]:
+    return [ln.strip()[:120] for ln in hlo_text.splitlines()
+            if re.search(r"\bscatter\(", ln)]
+
+
+def _batched(sim, st, points):
+    sb = stack_states(st, B)
+    pb = build_param_batch(sim, points)
+    return sb, pb
+
+
+def _memsys_batch():
+    sim, st = build(n_cores=4, pattern="mixed", n_reqs=8, donate=False)
+    points = [{"conn_latency[-1]": 10.0 * (i + 1),
+               "kind.l1.extra_hit_rate": 0.2 * i} for i in range(B)]
+    return sim, *_batched(sim, st, points)
+
+
+def test_batched_epoch_hlo_is_scatter_free():
+    sim, sb, pb = _memsys_batch()
+    fn = jax.jit(jax.vmap(sim._epoch))
+    hlo = fn.lower(sb, pb).compile().as_text()
+    assert not _scatters(hlo), _scatters(hlo)
+
+
+def test_batched_full_run_hlo_is_scatter_free():
+    sim, sb, pb = _memsys_batch()
+    fn = jax.jit(jax.vmap(
+        lambda s, p: sim._run(s, 1000.0, 100000, params=p)))
+    hlo = fn.lower(sb, pb).compile().as_text()
+    assert not _scatters(hlo), _scatters(hlo)
+
+
+def test_batched_onira_epoch_hlo_is_scatter_free():
+    # onira's register-scoreboard updates use dynamic indices (oh_set);
+    # they too must never compile to scatters under the config vmap
+    progs = [onira.prog_br_loop(), onira.prog_raw_hzd()]
+    sim, st = onira.build_onira(progs, mem_latency=5.0)
+    points = [{"conn_latency": float(i + 1),
+               "kind.cpu.flush_cycles": 3.0 + i} for i in range(B)]
+    sb, pb = _batched(sim, st, points)
+    fn = jax.jit(jax.vmap(sim._epoch))
+    hlo = fn.lower(sb, pb).compile().as_text()
+    assert not _scatters(hlo), _scatters(hlo)

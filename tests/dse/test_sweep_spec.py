@@ -1,0 +1,92 @@
+"""SweepSpec construction, static/traced splitting and param application."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dse import SweepSpec, apply_point, build_param_batch, stack_params
+from repro.sims.memsys import build
+
+
+@pytest.fixture(scope="module")
+def sim():
+    s, _ = build(n_cores=2, pattern="mixed", n_reqs=4, donate=False)
+    return s
+
+
+def test_grid_is_cartesian_product_in_order():
+    spec = SweepSpec.grid({"a": [1, 2], "b": [10, 20, 30]})
+    assert len(spec) == 6
+    assert spec.points[0] == {"a": 1, "b": 10}
+    assert spec.points[1] == {"a": 1, "b": 20}   # last axis fastest
+    assert spec.points[-1] == {"a": 2, "b": 30}
+
+
+def test_random_is_seeded_and_in_bounds():
+    axes = {"u": (2.0, 8.0), "l": (1.0, 100.0, "log"), "c": [4, 8, 16, "x"]}
+    s1 = SweepSpec.random(axes, n=32, seed=7)
+    s2 = SweepSpec.random(axes, n=32, seed=7)
+    assert s1.points == s2.points                # deterministic
+    for p in s1:
+        assert 2.0 <= p["u"] <= 8.0
+        assert 1.0 <= p["l"] <= 100.0
+        assert p["c"] in (4, 8, 16, "x")
+    assert len({p["u"] for p in s1}) > 1         # actually samples
+
+
+def test_split_static_groups_and_preserves_indices():
+    spec = SweepSpec.grid({"static.super_epoch": [1, 4],
+                           "conn_latency": [5.0, 9.0]})
+    groups = spec.split_static()
+    assert len(groups) == 2
+    (st1, ix1, tr1), (st2, ix2, tr2) = groups
+    assert st1 == {"super_epoch": 1} and st2 == {"super_epoch": 4}
+    assert ix1 == [0, 1] and ix2 == [2, 3]
+    assert tr1 == [{"conn_latency": 5.0}, {"conn_latency": 9.0}] == tr2
+
+
+def test_apply_point_paths(sim):
+    base = sim.default_params()
+    p = apply_point(base, {"conn_latency": 7.0})
+    assert np.all(np.asarray(p.conn_latency) == 7.0)
+    p = apply_point(base, {"conn_latency[-1]": 50.0})
+    np.testing.assert_array_equal(
+        np.asarray(p.conn_latency[:-1]), np.asarray(base.conn_latency[:-1]))
+    assert float(p.conn_latency[-1]) == 50.0
+    p = apply_point(base, {"period.dram": 4.0, "period.core[0]": 2.0})
+    assert float(p.periods["dram"][0]) == 4.0
+    assert float(p.periods["core"][0]) == 2.0
+    assert float(p.periods["core"][1]) == 1.0
+    p = apply_point(base, {"kind.l1.extra_hit_rate": 0.5})
+    assert float(p.kind["l1"]["extra_hit_rate"]) == 0.5
+    # base is never mutated
+    assert float(base.kind["l1"]["extra_hit_rate"]) == 0.0
+    assert np.all(np.asarray(base.periods["dram"]) == 1.0)
+
+
+@pytest.mark.parametrize("bad", [
+    {"nope": 1.0},
+    {"period.nokind": 1.0},
+    {"kind.l1.nope": 1.0},
+    {"kind.nokind.x": 1.0},
+    {"static.super_epoch": 2},       # static must not reach apply_point
+])
+def test_apply_point_rejects_unknown_paths(sim, bad):
+    with pytest.raises(KeyError):
+        apply_point(sim.default_params(), bad)
+
+
+def test_apply_point_rejects_out_of_range_index(sim):
+    with pytest.raises(AssertionError):
+        apply_point(sim.default_params(), {"conn_latency[99]": 2.0})
+
+
+def test_stack_params_shapes(sim):
+    spec = SweepSpec.grid({"conn_latency[-1]": [10.0, 20.0, 40.0]})
+    pb = build_param_batch(sim, list(spec))
+    assert pb.conn_latency.shape == (3,) + sim.default_params().conn_latency.shape
+    assert pb.periods["core"].shape[0] == 3
+    np.testing.assert_array_equal(
+        np.asarray(pb.conn_latency[:, -1]), [10.0, 20.0, 40.0])
+    # non-swept leaves are identical across the batch
+    assert np.all(np.asarray(pb.kind["l1"]["extra_hit_rate"]) == 0.0)
