@@ -7,6 +7,8 @@
   Fig 14     triosim_validation   DP/TP/PP step-time validation
   (framework) kernels             attention/SSD algorithm benchmarks
   (dse)      dse_throughput       batched-sweep configs/sec (DSE.md)
+  (dse)      struct_sweep         topology-family shape sweep vs per-shape
+                                  rebuild+recompile (DSE.md families)
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the assigned
 architectures come from the dry-run (see launch/dryrun.py + EXPERIMENTS.md);
@@ -30,8 +32,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (dse_throughput, kernels, onira_cpi, parallel_sim,
-                   pdes_scaling, smart_ticking, tracing_overhead,
-                   triosim_validation)
+                   pdes_scaling, smart_ticking, struct_sweep,
+                   tracing_overhead, triosim_validation)
     modules = {
         "smart_ticking": smart_ticking,
         "parallel_sim": parallel_sim,
@@ -41,6 +43,7 @@ def main() -> None:
         "kernels": kernels,
         "pdes_scaling": pdes_scaling,
         "dse_throughput": dse_throughput,
+        "struct_sweep": struct_sweep,
     }
     if args.only:
         modules = {k: v for k, v in modules.items() if k in args.only}

@@ -1,0 +1,90 @@
+"""Structural (topology-shape) sweep throughput: a masked topology family
+versus the per-shape rebuild+recompile workflow it replaces (DSE.md
+"Topology families").
+
+A 4-point ``shape.core`` ∈ {1, 2, 4, 8} sweep of the memsys hierarchy:
+
+* ``rebuild_baseline`` — one ``build(n_cores=S)`` + jit compile + run per
+  shape: what structural DSE costs when instance counts are build-time
+  constants (every ``static.*`` point is its own compile group).
+* ``family_cold`` — one padded family build + ONE compile of the vmapped
+  masked batch + the batched run (end-to-end, first-call cost).
+* ``family_warm`` — the batched run alone (steady-state sweep cost: in a
+  DSE campaign the single family compile amortizes across every round;
+  the ≥5x CI acceptance bar compares this rate against the rebuild
+  baseline, which pays compilation per point forever).
+"""
+import time
+
+import jax
+
+from repro.dse import BatchRunner, stack_params, stack_state_list
+from repro.sims.memsys import build, build_family
+
+SHAPES = (1, 2, 4, 8)
+UNTIL = 50000.0
+N_REQS = 24
+
+
+def _family_batch(fam):
+    pb = stack_params([fam.params_for({"core": s}) for s in SHAPES])
+    sb = stack_state_list([fam.state_for({"core": s}) for s in SHAPES])
+    return jax.block_until_ready(sb), jax.block_until_ready(pb)
+
+
+def bench():
+    rows = []
+    n = len(SHAPES)
+
+    # baseline: rebuild + recompile + run per shape
+    t0 = time.perf_counter()
+    for s in SHAPES:
+        sim, st = build(n_cores=s, pattern="mixed", n_reqs=N_REQS,
+                        donate=True)
+        out = sim.run(st, UNTIL)
+        out.time.block_until_ready()
+    dt_base = time.perf_counter() - t0
+    base_cps = n / dt_base
+    rows.append({
+        "name": "struct_sweep/rebuild_baseline",
+        "us_per_call": dt_base / n * 1e6,
+        "derived": f"{base_cps:.2f} shapes/s (one build+compile+run per "
+                   f"shape, {n}-shape sweep)",
+        "configs_per_sec": base_cps,
+    })
+
+    # family: one padded build, one compile, every shape a masked lane
+    t0 = time.perf_counter()
+    fam = build_family(n_cores=max(SHAPES), pattern="mixed", n_reqs=N_REQS,
+                       donate=True)
+    runner = BatchRunner(fam.sim)
+    sb, pb = _family_batch(fam)
+    out = runner.run_batch(sb, pb, UNTIL)
+    out.time.block_until_ready()
+    dt_cold = time.perf_counter() - t0
+    rows.append({
+        "name": "struct_sweep/family_cold",
+        "us_per_call": dt_cold * 1e6,
+        "derived": f"{n / dt_cold:.2f} shapes/s incl. the one family "
+                   f"build+compile ({(n / dt_cold) / base_cps:.2f}x the "
+                   f"rebuild baseline even end-to-end)",
+        "configs_per_sec": n / dt_cold,
+        "speedup_vs_rebuild": (n / dt_cold) / base_cps,
+    })
+
+    sb, pb = _family_batch(fam)     # fresh states; executable is cached
+    t0 = time.perf_counter()
+    out = runner.run_batch(sb, pb, UNTIL)
+    out.time.block_until_ready()
+    dt_warm = time.perf_counter() - t0
+    warm_cps = n / dt_warm
+    rows.append({
+        "name": "struct_sweep/family_warm",
+        "us_per_call": dt_warm * 1e6,
+        "derived": f"{warm_cps:.1f} shapes/s "
+                   f"({warm_cps / base_cps:.1f}x per-shape rebuild) "
+                   f"[acceptance: >=5x rebuild]",
+        "configs_per_sec": warm_cps,
+        "speedup_vs_rebuild": warm_cps / base_cps,
+    })
+    return rows

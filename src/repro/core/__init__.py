@@ -6,13 +6,15 @@ transparent parallelism, task-based tracing, real-time monitoring and trace
 visualization.  See DESIGN.md for the Go→JAX adaptation.
 """
 from .component import ComponentKind, KindHandle, TickResult
-from .engine import SimBuilder, SimParams, SimState, Simulation, Stats
+from .engine import (SimBuilder, SimParams, SimState, Simulation, Stats,
+                     check_not_consumed)
 from .message import (MSG_WORDS, f2i, i2f, msg_new, msg_reply, opcode,
                       payload, ready_time)
 from .ports import Ports, oh_set
 
 __all__ = [
     "ComponentKind", "KindHandle", "TickResult", "SimBuilder", "SimParams",
-    "SimState", "Simulation", "Stats", "Ports", "MSG_WORDS", "msg_new",
+    "SimState", "Simulation", "Stats", "check_not_consumed", "Ports",
+    "MSG_WORDS", "msg_new",
     "msg_reply", "opcode", "payload", "ready_time", "f2i", "i2f", "oh_set",
 ]

@@ -78,6 +78,26 @@ from .ports import EPS, Ports
 INF = jnp.float32(jnp.inf)
 
 
+def check_not_consumed(state) -> None:
+    """Raise a clear error if ``state`` was already donated into a run.
+
+    A donating ``run()`` consumes its input ``SimState`` — the buffers are
+    released to the output (``is_deleted()`` turns true on the input's
+    arrays).  Reusing it would otherwise surface as XLA's opaque
+    deleted-buffer failure deep inside dispatch; this check turns that
+    into an actionable message up front.
+    """
+    dead = [leaf for leaf in jax.tree.leaves(state)
+            if getattr(leaf, "is_deleted", lambda: False)()]
+    if dead:
+        raise RuntimeError(
+            "this SimState was already consumed by a donating run() — its "
+            f"buffers are deleted ({len(dead)} leaves). Keep using the "
+            "state a donating run *returns*; to reuse an input state, "
+            "deep-copy it first (sim.copy_state(state)) or build the "
+            "simulation with donate=False (see ENGINE_PERF.md).")
+
+
 def _align_after(t, period):
     """First grid point of ``period`` strictly after ``t``."""
     return (jnp.floor(t / period + EPS) + 1.0) * period
@@ -110,15 +130,29 @@ class SimParams:
       * ``kind`` — dict kind name -> that kind's opt-in model-parameter
         pytree (``ComponentKind.params``; ``{}`` for kinds without one),
         passed as the 4th argument to a 4-ary ``tick_fn``.
+      * ``inst_mask`` — dict kind name -> ``[n_instances]`` bool *activity
+        masks* (``None`` = everything active, the default).  A masked-off
+        instance never ticks, is pinned to ``next_tick = +inf`` (excluded
+        from the next-event min) and contributes nothing to the tick/
+        progress stats — so a *topology family* built at its maximum shape
+        (``SimBuilder.build(pad_shape=...)``) simulates any sub-shape by
+        mask alone, without rebuilding or recompiling (DSE.md).
+      * ``conn_mask`` — ``[C]`` bool (``None`` = all active).  A masked-off
+        connection never delivers and is pinned to ``conn_wake = +inf``.
+        ``Simulation.prefix_masks`` derives both masks for a prefix
+        sub-shape of a family.
 
     Params enter the loop as broadcast operands only — never as gather or
     scatter indices — so the scatter-free hot-loop property (ENGINE_PERF.md)
-    is preserved under both tracing and batch vmapping.
+    is preserved under both tracing and batch vmapping; the masks in
+    particular act through broadcast ``&``/``where`` selects.
     """
 
     conn_latency: jax.Array    # [C] f32
     periods: dict              # kind name -> [n_k] f32
     kind: dict                 # kind name -> params pytree ({} if none)
+    inst_mask: Any = None      # kind name -> [n_k] bool, or None (all on)
+    conn_mask: Any = None      # [C] bool, or None (all on)
 
 
 @jax.tree_util.register_dataclass
@@ -211,7 +245,7 @@ class SimBuilder:
     def build(self, naive: bool = False, cap_phys: int | None = None,
               sample_period: float = 0.0, max_samples: int = 1024,
               super_epoch: int | None = None, donate: bool = True,
-              ) -> "Simulation":
+              pad_shape: dict[str, int] | None = None) -> "Simulation":
         """Compile the topology.
 
         ``super_epoch`` — epochs fused per ``while_loop`` iteration (None =
@@ -219,11 +253,40 @@ class SimBuilder:
         ``donate`` — donate ``SimState`` into the jitted run so buffers are
         updated in place; callers must then treat the state passed to
         ``run()`` as consumed (see ENGINE_PERF.md).
+        ``pad_shape`` — kind name -> instance count: size every named
+        kind's segments to a *topology family* maximum before compiling
+        (padded instances get zero-filled init rows and repeat the last
+        declared period/capacity row).  Connections may wire the padded
+        instances — membership is validated against the padded counts — so
+        one build at the family maximum serves every sub-shape via the
+        ``SimParams.inst_mask`` / ``conn_mask`` activity masks (DSE.md).
         """
         return Simulation(self, naive=naive, cap_phys=cap_phys,
                           sample_period=sample_period,
                           max_samples=max_samples,
-                          super_epoch=super_epoch, donate=donate)
+                          super_epoch=super_epoch, donate=donate,
+                          pad_shape=pad_shape)
+
+
+def _pad_kind(k: ComponentKind, n_max: int) -> ComponentKind:
+    """Pad a kind's instance axis to a family maximum: zero init rows,
+    last-row periods/caps.  Padded rows only ever run when unmasked (a
+    degenerate but legal all-active run); under ``inst_mask`` they are
+    inert."""
+    n = k.n_instances
+    assert n_max >= n, f"pad_shape[{k.name!r}]={n_max} < declared {n}"
+    if n_max == n:
+        return k
+    pad = n_max - n
+    init = jax.tree.map(
+        lambda a: jnp.concatenate(
+            [jnp.asarray(a),
+             jnp.zeros((pad,) + jnp.asarray(a).shape[1:],
+                       jnp.asarray(a).dtype)]), k.init_state)
+    periods = np.concatenate([k.periods(), np.repeat(k.periods()[-1:], pad)])
+    caps = np.concatenate([k.caps(), np.repeat(k.caps()[-1:], pad, axis=0)])
+    return dataclasses.replace(k, n_instances=n_max, init_state=init,
+                               period=periods, cap=caps)
 
 
 class Simulation:
@@ -231,8 +294,13 @@ class Simulation:
 
     def __init__(self, b: SimBuilder, naive: bool, cap_phys: int | None,
                  sample_period: float, max_samples: int,
-                 super_epoch: int | None = None, donate: bool = True):
-        self.kinds = list(b.kinds)
+                 super_epoch: int | None = None, donate: bool = True,
+                 pad_shape: dict[str, int] | None = None):
+        pad_shape = pad_shape or {}
+        unknown = set(pad_shape) - {k.name for k in b.kinds}
+        assert not unknown, f"pad_shape names unknown kinds {sorted(unknown)}"
+        self.kinds = [_pad_kind(k, pad_shape[k.name])
+                      if k.name in pad_shape else k for k in b.kinds]
         self.naive = naive
         self.donate = donate
         self.sample_period = float(sample_period)
@@ -357,6 +425,46 @@ class Simulation:
             kind={k.name: (jax.tree.map(jnp.asarray, k.params)
                            if k.params is not None else {})
                   for k in self.kinds})
+
+    def prefix_masks(self, counts: dict[str, int]
+                     ) -> tuple[dict, jax.Array]:
+        """Activity masks for a *prefix sub-shape* of this topology.
+
+        ``counts`` maps kind names to active instance counts (unnamed
+        kinds stay fully active); instances ``0..count-1`` of each kind
+        are active.  Returns ``(inst_mask, conn_mask)`` for
+        :class:`SimParams`: a connection is active iff any of its member
+        ports belongs to an active instance — so per-instance links
+        between masked instances go quiet while shared fabrics (a family
+        crossbar with masked member ports) stay live.
+
+        The prefix discipline is what keeps masked runs bit-identical to
+        an unpadded build of the sub-shape (DSE.md): variable-count
+        members must occupy the leading member slots of their connection
+        in instance order, fixed members the trailing slots, so
+        round-robin arbitration sees the same relative slot order at
+        every shape.
+        """
+        unknown = set(counts) - {k.name for k in self.kinds}
+        assert not unknown, f"unknown kinds {sorted(unknown)}"
+        inst, act = {}, []
+        for k in self.kinds:
+            n = int(counts.get(k.name, k.n_instances))
+            assert 0 <= n <= k.n_instances, (k.name, n, k.n_instances)
+            m = np.arange(k.n_instances) < n
+            inst[k.name] = jnp.asarray(m)
+            act.append(np.repeat(m, k.n_ports))
+        port_act = (np.concatenate(act) if act else np.zeros((0,), bool))
+        conn = np.any(self._valid_np & port_act[self._mps_np], axis=1)
+        return inst, jnp.asarray(conn)
+
+    def _flat_inst_mask(self, inst_mask: dict) -> jax.Array:
+        """[NC] bool — per-component activity, ordered by kind
+        registration (component id order)."""
+        parts = [inst_mask[k.name] for k in self.kinds]
+        if not parts:
+            return jnp.zeros((0,), bool)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
     def set_default_peers(self, mapping: dict[int, int]):
         """Rewrite default peers (global port id -> peer port id) and refresh
@@ -584,6 +692,10 @@ class Simulation:
                 mask = (jnp.abs(r) < EPS) | (jnp.abs(r - periods_k) < EPS)
             else:
                 mask = next_tick[kc.csl] <= t + EPS
+            if P.inst_mask is not None:
+                # family activity mask: masked-off instances never tick
+                # (and therefore never count toward ticks/progress/busy)
+                mask = mask & P.inst_mask[name]
 
             sh = lambda a: a.reshape(n, p, *a.shape[1:])
             # kind params are closed over, not vmapped: every instance of a
@@ -687,15 +799,26 @@ class Simulation:
             if self.max_samples:
                 t = jnp.minimum(t, s.next_sample)
             active = s.conn_wake <= t + EPS
+        if P.conn_mask is not None:
+            # family activity mask: masked-off connections never deliver
+            active = active & P.conn_mask
 
         wake1 = _align_after(t, 1.0)          # shared next-cycle wake point
         s = dataclasses.replace(s, time=t)
         s, wake_comp = self._deliver(s, P, t, active, wake1)
         s, wake_conn = self._tick_kinds(s, P, t, wake1)
+        next_tick = jnp.minimum(s.next_tick, wake_comp)
+        conn_wake = jnp.minimum(s.conn_wake, wake_conn)
+        # Masked-off rows are pinned to +inf by broadcast selects so the
+        # next-event min never schedules them — the mask's only entry
+        # points into the wake reductions (no gathers/scatters involved).
+        if P.inst_mask is not None:
+            next_tick = jnp.where(self._flat_inst_mask(P.inst_mask),
+                                  next_tick, INF)
+        if P.conn_mask is not None:
+            conn_wake = jnp.where(P.conn_mask, conn_wake, INF)
         s = dataclasses.replace(
-            s,
-            next_tick=jnp.minimum(s.next_tick, wake_comp),
-            conn_wake=jnp.minimum(s.conn_wake, wake_conn),
+            s, next_tick=next_tick, conn_wake=conn_wake,
             stats=dataclasses.replace(s.stats, epochs=s.stats.epochs + 1))
         if self.max_samples:
             do = s.next_sample <= t + EPS
@@ -764,5 +887,7 @@ class Simulation:
         for this run (see :class:`SimParams` / ``default_params()``); its
         leaves are never donated.  ``None`` runs the build-time defaults."""
         assert until < 2 ** 24, "float32 cycle precision bound (DESIGN.md)"
+        if self.donate:
+            check_not_consumed(state)
         return self._run_jit(state, until, max_epochs=max_epochs,
                              params=params)

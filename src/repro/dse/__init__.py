@@ -7,23 +7,34 @@ per-kind model params — see DSE.md); this package turns that split into a
 sweep subsystem:
 
   * :mod:`~repro.dse.sweep`  — ``SweepSpec`` (grid / random / explicit
-    design points, traced + ``static.*`` axes) and param-batch stacking;
+    design points; traced, ``static.*`` and ``shape.*`` axes; eager path
+    validation) and param-batch stacking;
+  * :mod:`~repro.dse.family` — ``TopologyFamily``: one padded
+    maximum-shape build whose sub-shapes are selected by traced activity
+    masks, so instance counts / wiring sweep without recompiling;
   * :mod:`~repro.dse.runner` — ``BatchRunner`` / ``run_sweep``: one jitted
     ``vmap`` of the fused hot loop simulates hundreds of configs at once
-    (chunked for B >> memory, optionally pmapped over devices);
+    (chunked for B >> memory, optionally pmapped over devices); shape
+    axes lower to mask batches grouped per family, not compile groups;
   * :mod:`~repro.dse.report` — tidy rows, Pareto-front extraction and
     JSON/CSV export.
 
-A singleton batch is bit-identical to the unbatched engine — the
-invariant that makes sweep results trustworthy (tests/dse).
+A singleton batch is bit-identical to the unbatched engine, and a
+masked family lane is bit-identical on active rows to an unpadded build
+of its shape — the invariants that make sweep results trustworthy
+(tests/dse).
 """
+from .family import TopologyFamily
 from .report import format_table, pareto_front, tidy, to_csv, to_json
 from .runner import (BatchRunner, default_extract, lane, run_sweep,
-                     stack_states)
-from .sweep import SweepSpec, apply_point, build_param_batch, stack_params
+                     stack_state_list, stack_states)
+from .sweep import (SweepSpec, apply_point, axis_error, build_param_batch,
+                    split_shape, stack_params, valid_axes)
 
 __all__ = [
-    "SweepSpec", "apply_point", "build_param_batch", "stack_params",
-    "BatchRunner", "run_sweep", "stack_states", "lane", "default_extract",
+    "SweepSpec", "apply_point", "axis_error", "valid_axes",
+    "build_param_batch", "stack_params", "split_shape", "TopologyFamily",
+    "BatchRunner", "run_sweep", "stack_states", "stack_state_list", "lane",
+    "default_extract",
     "pareto_front", "tidy", "to_csv", "to_json", "format_table",
 ]

@@ -38,7 +38,11 @@ def pareto_front(rows: Sequence[Mapping],
 
     A row is dominated when some other row is at least as good on every
     objective and strictly better on one.  Ties/duplicates keep the first
-    occurrence.  Rows are returned in input order.
+    occurrence.  Rows are returned in input order.  Rows with a NaN in
+    any objective are excluded — NaN compares false against everything,
+    so they could neither dominate nor be dominated and would otherwise
+    pollute every front (a NaN metric usually means the config never
+    finished; it is not a trade-off point).
     """
     assert objectives and all(d in (MIN, MAX) for d in objectives.values())
 
@@ -47,7 +51,8 @@ def pareto_front(rows: Sequence[Mapping],
         return tuple((1.0 if d == MAX else -1.0) * float(r[c])
                      for c, d in objectives.items())
 
-    scored = [(score(r), i) for i, r in enumerate(rows)]
+    scored = [(s, i) for i, r in enumerate(rows)
+              for s in [score(r)] if not any(v != v for v in s)]
     front = []
     for s, i in scored:
         dominated = any(

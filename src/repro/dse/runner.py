@@ -24,14 +24,18 @@ Execution knobs:
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import SimParams, SimState, Stats
+from repro.core import SimParams, SimState, Stats, check_not_consumed
 
-from .sweep import SweepSpec, build_param_batch
+from .family import TopologyFamily
+from .sweep import (STATIC_PREFIX, SweepSpec, apply_point,
+                    build_param_batch, split_shape, stack_params,
+                    stack_trees)
 
 
 def stack_states(state: SimState, n: int) -> SimState:
@@ -42,6 +46,12 @@ def stack_states(state: SimState, n: int) -> SimState:
     ``state`` stays reusable as a template.
     """
     return jax.tree.map(lambda x: jnp.stack([x] * n), state)
+
+
+def stack_state_list(states: Sequence[SimState]) -> SimState:
+    """Stack *distinct* per-lane states (e.g. one per family sub-shape)
+    into a batch.  Fresh buffers per leaf, like :func:`stack_states`."""
+    return stack_trees(states)
 
 
 def lane(tree, i: int):
@@ -113,25 +123,35 @@ class BatchRunner:
 
         ``states_b`` is donated when the simulation was built with
         ``donate=True`` — treat it as consumed (see ``stack_states`` /
-        ``Simulation.copy_state``).
+        ``Simulation.copy_state``); reusing a consumed batch raises
+        immediately instead of failing deep inside XLA dispatch.
         """
+        if self.sim.donate:
+            check_not_consumed(states_b)
         b = int(params_b.conn_latency.shape[0])
         fn = self._batched_fn(b, max_epochs, shard)
         return fn(states_b, params_b, jnp.float32(until))
 
     # ------------------------------------------------------------------
-    def run_chunked(self, template: SimState, params_b: SimParams,
-                    until: float, chunk: int | None = None,
+    def run_chunked(self, template: SimState | Sequence[SimState],
+                    params_b: SimParams, until: float,
+                    chunk: int | None = None,
                     max_epochs: int = 2_000_000,
                     shard: bool = False) -> SimState:
         """Run a B-point batch in fixed-size chunks of fresh state stacks.
 
-        All chunks share one compiled executable; the final partial chunk
-        is padded by repeating its last point and the padding lanes are
-        dropped from the result.  Returns the stacked final states in
-        point order.
+        ``template`` is either one ``SimState`` (every lane starts from a
+        fresh copy of it) or a sequence of B per-lane states (topology
+        families: each lane's initial state encodes its sub-shape's
+        workload).  All chunks share one compiled executable; the final
+        partial chunk is padded by repeating its last point and the
+        padding lanes are dropped from the result.  Returns the stacked
+        final states in point order.
         """
         B = int(params_b.conn_latency.shape[0])
+        per_lane = isinstance(template, (list, tuple))
+        if per_lane:
+            assert len(template) == B, (len(template), B)
         chunk = B if chunk is None else max(1, min(int(chunk), B))
         outs = []
         for lo in range(0, B, chunk):
@@ -142,7 +162,12 @@ class BatchRunner:
                 part = jax.tree.map(
                     lambda x: jnp.concatenate(
                         [x] + [x[-1:]] * pad), part)
-            sb = stack_states(template, chunk)
+            if per_lane:
+                lanes = list(template[lo:hi])
+                lanes += [lanes[-1]] * (chunk - len(lanes))
+                sb = stack_state_list(lanes)
+            else:
+                sb = stack_states(template, chunk)
             out = self.run_batch(sb, part, until, max_epochs, shard)
             if hi - lo < chunk:
                 out = jax.tree.map(lambda x: x[:hi - lo], out)
@@ -153,6 +178,21 @@ class BatchRunner:
 
 
 # ---------------------------------------------------------------------------
+def _static_kwarg_names(build_fn) -> list[str] | None:
+    """Keyword names ``build_fn`` accepts, or None if it takes **kwargs
+    (then any ``static.*`` axis must be assumed valid)."""
+    try:
+        sig = inspect.signature(build_fn)
+    except (TypeError, ValueError):
+        return None
+    params = sig.parameters.values()
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+        return None
+    return [p.name for p in params
+            if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                          inspect.Parameter.KEYWORD_ONLY)]
+
+
 def run_sweep(build_fn: Callable, spec: SweepSpec, until: float,
               extract: Callable | None = None, chunk: int | None = None,
               max_epochs: int = 2_000_000, shard: bool = False) -> list[dict]:
@@ -164,15 +204,76 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until: float,
     final_lane_state) -> dict`` pulls per-config results (default: engine
     counters).  Rows come back in spec order, each the point's axis
     assignment merged with its extracted results.
+
+    **Topology families** (``shape.*`` axes, DSE.md): shape axes sweep
+    instance counts / wiring *without* forming compile groups.  The
+    runner groups by ``static.*`` only, computes each group's family
+    maximum per shape axis, and calls ``build_fn(**static_kwargs,
+    shape={axis: max})``, which must return a
+    :class:`~repro.dse.family.TopologyFamily`.  Every shape in the group
+    then runs as one lane of a single compiled vmapped batch — activity
+    masks and per-lane initial states select each sub-shape, so a
+    1..8-core grid costs one compile instead of one per shape.
+
+    All axis paths are validated before anything runs: unknown axes
+    raise ``ValueError`` naming the path and the valid alternatives.
     """
     extract = extract or default_extract
     rows: list[dict | None] = [None] * len(spec)
+    shape_mode = spec.has_shape_axes()
+    static_ok = _static_kwarg_names(build_fn)
+    if static_ok is not None:
+        bad = [a for a in spec.axes if a.startswith(STATIC_PREFIX)
+               and a[len(STATIC_PREFIX):] not in static_ok]
+        if bad:
+            raise ValueError(
+                f"invalid static axes {bad}: build function accepts "
+                f"only {sorted(static_ok)}")
     for static_kwargs, indices, traced in spec.split_static():
-        sim, st = build_fn(**static_kwargs)
-        params_b = build_param_batch(sim, traced)
-        runner = BatchRunner(sim)
-        out = runner.run_chunked(st, params_b, until, chunk=chunk,
-                                 max_epochs=max_epochs, shard=shard)
+        # validate each group's own axes against that group's build (a
+        # group's sim can differ structurally, e.g. static.n_cores, so
+        # neither the whole-spec union nor a single target would do)
+        group_spec = SweepSpec(tuple(traced))
+        if shape_mode:
+            split = [split_shape(pt) for pt in traced]
+            fam_shape: dict[str, int] = {}
+            for shape_pt, _ in split:
+                for name, v in shape_pt.items():
+                    fam_shape[name] = max(int(v), fam_shape.get(name, 1))
+            fam = build_fn(**static_kwargs, shape=fam_shape)
+            if not isinstance(fam, TopologyFamily):
+                raise TypeError(
+                    "shape.* axes require a family-aware build function: "
+                    "build_fn(**static, shape={...}) must return a "
+                    f"TopologyFamily, got {type(fam).__name__}")
+            group_spec.validate(fam)
+            sim = fam.sim
+            base = sim.default_params()
+            # grids repeat shapes across traced-axis combinations: derive
+            # each distinct shape's masks once and share them between the
+            # lane's params and initial state
+            mask_cache: dict[tuple, tuple] = {}
+            plist, states = [], []
+            for shape_pt, traced_pt in split:
+                full = fam.full_shape(shape_pt)
+                key = tuple(sorted(full.items()))
+                if key not in mask_cache:
+                    mask_cache[key] = fam.masks(full)
+                m = mask_cache[key]
+                plist.append(fam.params_for(
+                    full, apply_point(base, traced_pt), masks=m))
+                states.append(fam.state_for(full, masks=m))
+            params_b = stack_params(plist)
+            runner = BatchRunner(sim)
+            out = runner.run_chunked(states, params_b, until, chunk=chunk,
+                                     max_epochs=max_epochs, shard=shard)
+        else:
+            sim, st = build_fn(**static_kwargs)
+            group_spec.validate(sim)
+            params_b = build_param_batch(sim, traced)
+            runner = BatchRunner(sim)
+            out = runner.run_chunked(st, params_b, until, chunk=chunk,
+                                     max_epochs=max_epochs, shard=shard)
         out = jax.block_until_ready(out)
         for j, i in enumerate(indices):
             row = dict(spec.points[i])

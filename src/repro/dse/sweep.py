@@ -14,12 +14,24 @@ vmapped batch):
   ``kind.<kind>.<leaf>``      an opt-in model param (``ComponentKind.params``
                               pytree; nested dicts use dotted paths)
   ``static.<kwarg>``          build-function keyword (e.g. super_epoch)
+  ``shape.<axis>``            a topology-family shape axis (instance
+                              counts / wiring): lowered to traced activity
+                              *masks* over one padded maximum-shape build,
+                              NOT to per-shape compile groups (DSE.md
+                              "Topology families")
 
 :class:`SweepSpec` holds an ordered tuple of points, constructed by
 ``grid`` (cartesian product), ``random`` (uniform/log-uniform/choice
 sampling), or ``explicit``.  ``split_static`` groups points by their
 static-axis assignment so the runner compiles once per group; point order
 within the spec is the canonical result order.
+
+Axis paths can be checked *eagerly* — before any build or compile —
+against the target simulation: pass ``validate_for=sim`` (or a
+``TopologyFamily``) to a constructor, or call ``spec.validate(target)``;
+unknown kinds/leaves raise a ``ValueError`` naming the bad path and the
+valid axes instead of a deep ``KeyError`` mid-``run_sweep`` (which also
+validates each compile group up front).
 """
 from __future__ import annotations
 
@@ -35,6 +47,7 @@ import numpy as np
 from repro.core import SimParams
 
 STATIC_PREFIX = "static."
+SHAPE_PREFIX = "shape."
 
 _INDEXED = re.compile(r"^(?P<base>.*?)\[(?P<ix>-?\d+)\]$")
 
@@ -53,15 +66,20 @@ class SweepSpec:
 
     # -- constructors ------------------------------------------------------
     @staticmethod
-    def grid(axes: dict[str, Sequence]) -> "SweepSpec":
+    def grid(axes: dict[str, Sequence], validate_for=None) -> "SweepSpec":
         """Cartesian product of the axis value lists (insertion order:
-        last axis varies fastest)."""
+        last axis varies fastest).  ``validate_for`` (a ``Simulation`` or
+        ``TopologyFamily``) checks the axis paths eagerly at construction."""
         names = list(axes)
         combos = itertools.product(*(list(axes[n]) for n in names))
-        return SweepSpec(tuple(dict(zip(names, c)) for c in combos))
+        spec = SweepSpec(tuple(dict(zip(names, c)) for c in combos))
+        if validate_for is not None:
+            spec.validate(validate_for)
+        return spec
 
     @staticmethod
-    def random(axes: dict[str, Any], n: int, seed: int = 0) -> "SweepSpec":
+    def random(axes: dict[str, Any], n: int, seed: int = 0,
+               validate_for=None) -> "SweepSpec":
         """``n`` points sampled independently per axis.  Axis specs:
         ``(lo, hi)`` uniform float, ``(lo, hi, 'log')`` log-uniform, or a
         list/tuple of >2 (or non-numeric) entries = uniform choice."""
@@ -83,12 +101,76 @@ class SweepSpec:
             else:
                 cols[name] = [spec[int(i)]
                               for i in rng.integers(0, len(spec), n)]
-        return SweepSpec(tuple(
+        out = SweepSpec(tuple(
             {name: cols[name][i] for name in axes} for i in range(n)))
+        if validate_for is not None:
+            out.validate(validate_for)
+        return out
 
     @staticmethod
-    def explicit(points: Iterable[dict]) -> "SweepSpec":
-        return SweepSpec(tuple(dict(p) for p in points))
+    def explicit(points: Iterable[dict], validate_for=None) -> "SweepSpec":
+        spec = SweepSpec(tuple(dict(p) for p in points))
+        if validate_for is not None:
+            spec.validate(validate_for)
+        return spec
+
+    # -- eager validation --------------------------------------------------
+    @property
+    def axes(self) -> list[str]:
+        """Union of axis paths across points, in first-appearance order."""
+        seen: list[str] = []
+        for pt in self.points:
+            for k in pt:
+                if k not in seen:
+                    seen.append(k)
+        return seen
+
+    def has_shape_axes(self) -> bool:
+        return any(k.startswith(SHAPE_PREFIX) for k in self.axes)
+
+    def validate(self, target, static_ok: Sequence[str] | None = None
+                 ) -> "SweepSpec":
+        """Check every axis path against ``target`` (a ``Simulation`` or a
+        ``TopologyFamily``) *before* anything is built or compiled.
+
+        Raises ``ValueError`` naming each bad path and the valid axes —
+        instead of the deep ``KeyError`` an unknown kind/leaf (e.g.
+        ``period.l1x``) would otherwise surface mid-``run_sweep``.
+        ``static_ok`` (optional) whitelists ``static.*`` kwarg names
+        (``run_sweep`` derives it from the build function's signature).
+        Returns ``self`` for chaining.
+        """
+        family = getattr(target, "shape_max", None)
+        sim = target.sim if family is not None else target
+        params = sim.default_params()
+        errors = []
+        for path in self.axes:
+            if path.startswith(STATIC_PREFIX):
+                name = path[len(STATIC_PREFIX):]
+                if static_ok is not None and name not in static_ok:
+                    errors.append(f"{path!r}: build function accepts no "
+                                  f"keyword {name!r} "
+                                  f"(have {sorted(static_ok)})")
+            elif path.startswith(SHAPE_PREFIX):
+                name = path[len(SHAPE_PREFIX):]
+                if family is None:
+                    errors.append(
+                        f"{path!r}: shape axes need a topology family "
+                        "(a build function returning TopologyFamily); "
+                        "this target is a plain Simulation")
+                elif name not in family:
+                    errors.append(f"{path!r}: unknown family shape axis "
+                                  f"(have {sorted(family)})")
+            else:
+                err = axis_error(params, path)
+                if err:
+                    errors.append(err)
+        if errors:
+            raise ValueError(
+                "invalid sweep axes:\n  " + "\n  ".join(errors)
+                + "\nvalid axes for this target:\n  "
+                + "\n  ".join(valid_axes(params, family)))
+        return self
 
     # -- static/traced split ----------------------------------------------
     def split_static(self):
@@ -113,6 +195,79 @@ class SweepSpec:
 
 
 # ---------------------------------------------------------------------------
+def split_shape(point: dict) -> tuple[dict, dict]:
+    """Split one design point into (shape assignment, traced assignments).
+
+    ``shape.<axis>`` keys come back stripped of their prefix; everything
+    else (the traced axes) is returned untouched for ``apply_point``.
+    """
+    shape = {k[len(SHAPE_PREFIX):]: v for k, v in point.items()
+             if k.startswith(SHAPE_PREFIX)}
+    traced = {k: v for k, v in point.items()
+              if not k.startswith(SHAPE_PREFIX)}
+    return shape, traced
+
+
+def _leaf_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree):
+            out += _leaf_paths(tree[k], f"{prefix}{k}.")
+        return out
+    return [prefix[:-1]] if prefix else []
+
+
+def valid_axes(params: SimParams, shape_axes=None) -> list[str]:
+    """Human-readable list of every sweepable axis of a target."""
+    axes = ["conn_latency", "conn_latency[i]"]
+    for k in sorted(params.periods):
+        axes += [f"period.{k}", f"period.{k}[i]"]
+    for k in sorted(params.kind):
+        for leaf in _leaf_paths(params.kind[k]):
+            axes.append(f"kind.{k}.{leaf}")
+    for name in sorted(shape_axes or ()):
+        axes.append(f"shape.{name}")
+    axes.append("static.<build kwarg>")
+    return axes
+
+
+def axis_error(params: SimParams, path: str) -> str | None:
+    """``None`` if ``path`` names a traced leaf of ``params``, else a
+    one-line description of why it does not."""
+    m = _INDEXED.match(path)
+    base, ix = (m["base"], int(m["ix"])) if m else (path, None)
+
+    def ix_ok(n):
+        if ix is not None and not -n <= ix < n:
+            return f"{path!r}: index {ix} out of range for [{n}]"
+        return None
+
+    if base == "conn_latency":
+        return ix_ok(params.conn_latency.shape[0])
+    if base.startswith("period."):
+        kname = base[len("period."):]
+        if kname not in params.periods:
+            return (f"{path!r}: unknown kind {kname!r} "
+                    f"(have {sorted(params.periods)})")
+        return ix_ok(params.periods[kname].shape[0])
+    if base.startswith("kind."):
+        if ix is not None:
+            return f"{path!r}: kind-param axes are not indexable"
+        kname, _, leaf = base[len("kind."):].partition(".")
+        if kname not in params.kind or not params.kind[kname]:
+            return (f"{path!r}: kind {kname!r} has no params "
+                    f"(kinds with params: "
+                    f"{sorted(k for k, v in params.kind.items() if v)})")
+        tree = params.kind[kname]
+        for key in leaf.split("."):
+            if not isinstance(tree, dict) or key not in tree:
+                return (f"{path!r}: no param leaf {leaf!r} on kind "
+                        f"{kname!r} (have {_leaf_paths(params.kind[kname])})")
+            tree = tree[key]
+        return None
+    return f"unknown sweep axis {path!r}"
+
+
 def _set_indexed(arr, path, ix, value):
     n = arr.shape[0]
     assert -n <= ix < n, f"{path}: index {ix} out of range for [{n}]"
@@ -132,6 +287,10 @@ def apply_point(params: SimParams, point: dict) -> SimParams:
         if path.startswith(STATIC_PREFIX):
             raise KeyError(f"static axis {path!r} reached apply_point — "
                            "route points through SweepSpec.split_static")
+        if path.startswith(SHAPE_PREFIX):
+            raise KeyError(f"shape axis {path!r} reached apply_point — "
+                           "route points through split_shape and a "
+                           "TopologyFamily (masks, not param leaves)")
         m = _INDEXED.match(path)
         base, ix = (m["base"], int(m["ix"])) if m else (path, None)
         if base == "conn_latency":
@@ -158,7 +317,8 @@ def apply_point(params: SimParams, point: dict) -> SimParams:
                                     value, path)
         else:
             raise KeyError(f"unknown sweep axis {path!r}")
-    return SimParams(conn_latency=conn, periods=periods, kind=kind)
+    return dataclasses.replace(params, conn_latency=conn, periods=periods,
+                               kind=kind)
 
 
 def _set_leaf(tree, keys, value, path):
@@ -174,10 +334,16 @@ def _set_leaf(tree, keys, value, path):
     return out
 
 
+def stack_trees(trees: Sequence) -> Any:
+    """Stack a list of identically-structured pytrees into one batch
+    (leading axis B), materializing fresh buffers per leaf."""
+    assert trees, "empty batch"
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
 def stack_params(plist: Sequence[SimParams]) -> SimParams:
     """Stack per-point :class:`SimParams` into one batch (leading axis B)."""
-    assert plist, "empty sweep"
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+    return stack_trees(plist)
 
 
 def build_param_batch(sim, points: Sequence[dict]) -> SimParams:

@@ -23,6 +23,9 @@ service latency sweeps ride the crossbar connection latency and the
 """
 from __future__ import annotations
 
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -212,6 +215,108 @@ def finish_stats(sim, st):
         "remaining": int(jnp.sum(cs["core"]["remaining"])),
         "outstanding": int(jnp.sum(cs["core"]["outstanding"])),
     }
+
+
+# ---------------------------------------------------------------------------
+# topology family: one padded build sweeping n_cores by activity mask
+# ---------------------------------------------------------------------------
+def build_family(shape=None, n_cores: int = 8, pattern: str = "mixed",
+                 n_reqs: int = 64, dram_latency: float = 30.0, seed: int = 0,
+                 super_epoch: int | None = None, donate: bool = True,
+                 dram_period: float = 1.0, naive: bool = False):
+    """The memsys topology *family* with up to ``n_cores`` cores.
+
+    Built once at the family maximum (``pad_shape`` sizes the core/L1
+    segments; the crossbar wires every potential L1 port plus the shared
+    DRAM), it simulates any ``core`` count 1..n_cores via
+    ``SimParams`` activity masks — one compile for the whole
+    ``shape.core`` sweep axis (DSE.md "Topology families").
+
+    Contractual detail that makes masked runs bit-identical to unpadded
+    builds: active crossbar members occupy the leading member slots in
+    instance order with the fixed DRAM port last, so round-robin
+    arbitration sees the same relative slot order at every shape; and
+    ``state_fn`` reseeds the workload RNG per shape, so active rows of
+    the padded initial state equal ``build(n_cores=shape)`` exactly.
+
+    Returns a :class:`repro.dse.TopologyFamily` with shape axis
+    ``core`` (``run_sweep`` passes ``shape={"core": max}``).
+    """
+    from repro.dse.family import TopologyFamily
+
+    if shape:
+        # run_sweep passes the sweep's family maximum — size the padding
+        # to it (an oversize family would tick masked rows for nothing)
+        n_cores = int(shape.get("core", n_cores))
+    n_max, n_sets = int(n_cores), 64
+    b = SimBuilder()
+    # kinds are declared as single-row templates; pad_shape sizes every
+    # segment to the family maximum (zero rows — state_fn supplies the
+    # per-shape workload, so the templates never reach a run)
+    core = b.add_kind(ComponentKind(
+        "core", core_tick, 1, 1,
+        {"remaining": jnp.zeros(1, jnp.int32),
+         "outstanding": jnp.zeros(1, jnp.int32),
+         "addr": jnp.zeros(1, jnp.int32),
+         "seq": jnp.zeros(1, jnp.int32),
+         "think": jnp.zeros(1, jnp.int32),
+         "tag": jnp.zeros(1, jnp.int32),
+         "next_issue": jnp.zeros(1, jnp.float32)}, cap=2,
+        params=CORE_PARAMS))
+    l1 = b.add_kind(ComponentKind(
+        "l1", l1_tick, 1, 2,
+        {"tags": jnp.full((1, n_sets), -1, jnp.int32),
+         "mshr_busy": jnp.zeros(1, jnp.int32),
+         "hits": jnp.zeros(1, jnp.int32),
+         "misses": jnp.zeros(1, jnp.int32)}, cap=2,
+        params=L1_PARAMS))
+    dram = b.add_kind(ComponentKind(
+        "dram", dram_tick, 1, 1,
+        {"served": jnp.zeros(1, jnp.int32)}, cap=4, period=dram_period))
+    for i in range(n_max):
+        b.connect([core.port(i, 0), l1.port(i, 0)], latency=1.0)
+    b.connect([l1.port(i, 1) for i in range(n_max)] + [dram.port(0, 0)],
+              latency=dram_latency)
+    sim = b.build(naive=naive, super_epoch=super_epoch, donate=donate,
+                  pad_shape={"core": n_max, "l1": n_max})
+    dram_pid = sim.port_id("dram", 0, 0)
+    sim.set_default_peers(
+        {sim.port_id("l1", i, 1): dram_pid for i in range(n_max)})
+
+    def state_fn(shape):
+        n = int(shape["core"])
+        # replay build()'s exact RNG sequence at this shape so active rows
+        # of the padded state are bit-identical to an unpadded build
+        rng = np.random.default_rng(seed)
+        remaining, think, seq = _workload(pattern, n, n_reqs, rng)
+        addr = rng.integers(0, 1 << 20, n).astype(np.int32)
+
+        def pad(a):
+            a = np.asarray(a)
+            return np.concatenate(
+                [a, np.zeros((n_max - n,) + a.shape[1:], a.dtype)])
+
+        st = sim.init_state()
+        cs = dict(st.comp_state)
+        cs["core"] = {
+            "remaining": pad(remaining),
+            "outstanding": np.zeros(n_max, np.int32),
+            "addr": pad(addr), "seq": pad(seq), "think": pad(think),
+            "tag": np.arange(n_max, dtype=np.int32),
+            "next_issue": np.zeros(n_max, np.float32)}
+        cs["l1"] = {
+            "tags": np.full((n_max, n_sets), -1, np.int32),
+            "mshr_busy": np.zeros(n_max, np.int32),
+            "hits": np.zeros(n_max, np.int32),
+            "misses": np.zeros(n_max, np.int32)}
+        cs["dram"] = {"served": np.zeros(1, np.int32)}
+        return dataclasses.replace(
+            st, comp_state=jax.tree.map(jnp.asarray, cs))
+
+    return TopologyFamily(
+        sim=sim, shape_max={"core": n_max},
+        kind_counts=lambda s: {"core": s["core"], "l1": s["core"]},
+        state_fn=state_fn)
 
 
 # ---------------------------------------------------------------------------

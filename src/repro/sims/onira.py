@@ -15,6 +15,9 @@ the paper's Verilator RTL, which is unavailable offline — DESIGN.md §7).
 """
 from __future__ import annotations
 
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -194,6 +197,63 @@ def build_onira(progs: list[np.ndarray], mem_latency: float = 5.0,
         b.connect([cpu.port(i, 0), mem.port(i, 0)], latency=mem_latency)
     sim = b.build(naive=naive)
     return sim, sim.init_state()
+
+
+def build_onira_family(progs: list[np.ndarray], mem_latency: float = 5.0,
+                       shape=None, naive: bool = False):
+    """The onira topology family: up to ``len(progs)`` CPU+memory pairs.
+
+    One padded build (``pad_shape`` sizes the cpu/mem segments to the
+    family maximum) runs any prefix of the program list via activity
+    masks — the ``shape.cpu`` axis sweeps how many pipelines are live
+    without recompiling, and each masked run is bit-identical on active
+    rows to ``build_onira(progs[:n])`` (pinned by
+    ``tests/dse/test_structural.py``).
+
+    Returns a :class:`repro.dse.TopologyFamily` with shape axis ``cpu``.
+    """
+    from repro.dse.family import TopologyFamily
+
+    n_max = len(progs)
+    if shape:
+        # size the family to the sweep's maximum (must fit the programs)
+        n_max = int(shape.get("cpu", n_max))
+        assert n_max <= len(progs), (n_max, len(progs))
+    b = SimBuilder()
+    cpu = b.add_kind(ComponentKind(
+        "cpu", cpu_tick, 1, 1,
+        {"prog": jnp.zeros((1, MAXI, 4), jnp.int32),
+         "pc": jnp.zeros(1, jnp.int32),
+         "regs": jnp.zeros((1, 33), jnp.int32),
+         "busy": jnp.zeros((1, 33), jnp.int32),
+         "pending": jnp.zeros(1, jnp.int32),
+         "retired": jnp.zeros(1, jnp.int32),
+         "stalls": jnp.zeros(1, jnp.int32),
+         "done": jnp.zeros(1, jnp.int32),
+         "halt_time": jnp.zeros(1, jnp.float32),
+         "stall_until": jnp.zeros(1, jnp.float32)}, cap=4,
+        params=CPU_PARAMS))
+    mem = b.add_kind(ComponentKind(
+        "mem", mem_tick, 1, 1, {"served": jnp.zeros(1, jnp.int32)}, cap=4))
+    for i in range(n_max):
+        b.connect([cpu.port(i, 0), mem.port(i, 0)], latency=mem_latency)
+    sim = b.build(naive=naive,
+                  pad_shape={"cpu": n_max, "mem": n_max})
+
+    def state_fn(shape_d):
+        n = int(shape_d["cpu"])
+        prog = np.zeros((n_max, MAXI, 4), np.int32)
+        prog[:n] = np.stack(progs[:n])
+        st = sim.init_state()
+        cs = dict(st.comp_state)
+        cs["cpu"] = dict(cs["cpu"], prog=prog)
+        return dataclasses.replace(
+            st, comp_state=jax.tree.map(jnp.asarray, cs))
+
+    return TopologyFamily(
+        sim=sim, shape_max={"cpu": n_max},
+        kind_counts=lambda s: {"cpu": s["cpu"], "mem": s["cpu"]},
+        state_fn=state_fn)
 
 
 def run_microbenches(names=None, mem_latency=5.0, until=20000.0):

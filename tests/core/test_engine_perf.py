@@ -89,6 +89,21 @@ def test_copy_state_survives_donation():
     _assert_states_identical(out, out2)
 
 
+def test_reusing_consumed_state_raises_clear_error():
+    """A second use of a donated input must raise an actionable error up
+    front (pointing at copy_state / donate=False), not surface as XLA's
+    opaque deleted-buffer failure mid-dispatch."""
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4)
+    out = sim.run(st, until=100.0)
+    with pytest.raises(RuntimeError, match="copy_state"):
+        sim.run(st, until=200.0)
+    with pytest.raises(RuntimeError, match="donate=False"):
+        sim.run(st, until=200.0)
+    # the returned state still chains normally
+    out2 = sim.run(out, until=200.0)
+    assert float(out2.time) >= 0.0
+
+
 def test_no_donate_build_keeps_input_reusable():
     sim, st = build(n_cores=2, pattern="mixed", n_reqs=4, donate=False)
     out = sim.run(st, until=5000.0)

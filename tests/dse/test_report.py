@@ -33,6 +33,33 @@ def test_pareto_front_drops_dominated_and_duplicate_rows():
     assert front == [{"a": 1.0, "b": 1.0}]
 
 
+def test_pareto_front_single_row():
+    rows = [{"a": 3.0, "note": "only"}]
+    assert pareto_front(rows, {"a": "min"}) == rows
+    assert pareto_front(rows, {"a": "max"}) == rows
+
+
+def test_pareto_front_tied_points_keep_first_occurrence():
+    # distinct configs, identical objective vectors: the tie is resolved
+    # to the first row in input order (stable, no double-reporting)
+    rows = [{"a": 1.0, "b": 2.0, "cfg": "x"},
+            {"a": 1.0, "b": 2.0, "cfg": "y"},
+            {"a": 2.0, "b": 1.0, "cfg": "z"}]
+    front = pareto_front(rows, {"a": "min", "b": "min"})
+    assert front == [rows[0], rows[2]]
+
+
+def test_pareto_front_excludes_nan_metrics():
+    nan = float("nan")
+    rows = [{"a": 1.0, "b": 5.0}, {"a": nan, "b": 0.0},   # NaN objective
+            {"a": 2.0, "b": nan}, {"a": 3.0, "b": 1.0}]
+    front = pareto_front(rows, {"a": "min", "b": "min"})
+    # NaN rows neither appear on the front nor shield dominated rows
+    assert front == [rows[0], rows[3]]
+    # all-NaN input: empty front rather than everything "non-dominated"
+    assert pareto_front([{"a": nan}, {"a": nan}], {"a": "min"}) == []
+
+
 def test_tidy_unions_keys_and_coerces_scalars():
     import numpy as np
     rows = [{"a": np.float32(1.5)}, {"a": 2, "b": np.int32(7)}]

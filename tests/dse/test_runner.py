@@ -113,6 +113,20 @@ def test_copy_state_makes_batched_input_survive_donation():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_consumed_batch_reuse_raises_clear_error():
+    """Reusing a donated batch must fail with an actionable message, not
+    XLA's opaque deleted-buffer error."""
+    sim, st = _build(donate=True)
+    runner = BatchRunner(sim)
+    pb = build_param_batch(sim, POINTS[:2])
+    sb = stack_states(st, 2)
+    runner.run_batch(sb, pb, 1000.0)
+    with pytest.raises(RuntimeError, match="copy_state"):
+        runner.run_batch(sb, pb, 1000.0)
+    with pytest.raises(RuntimeError, match="donate=False"):
+        sim.run(sb, until=1000.0)
+
+
 def test_donate_false_build_keeps_batched_input_reusable():
     sim, st = _build(donate=False)
     runner = BatchRunner(sim)

@@ -6,7 +6,9 @@ are formulated to avoid them, and SimParams enter as broadcast operands
 only.  Asserted on the *optimized* HLO (where XLA has already rewritten
 constant-index ``.at[].set`` updates into dynamic-update-slices): neither
 the batched epoch nor the full batched while-loop run may contain a
-scatter op.
+scatter op.  Topology-family activity masks (``inst_mask``/``conn_mask``)
+must preserve the property: masks enter as broadcast ``&``/``where``
+operands only, never as gather/scatter indices.
 """
 import re
 
@@ -14,9 +16,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.dse import build_param_batch, stack_states
+from repro.dse import build_param_batch, stack_params, stack_state_list, \
+    stack_states
 from repro.sims import onira
-from repro.sims.memsys import build
+from repro.sims.memsys import build, build_family
 
 B = 4
 
@@ -48,6 +51,31 @@ def test_batched_epoch_hlo_is_scatter_free():
 
 def test_batched_full_run_hlo_is_scatter_free():
     sim, sb, pb = _memsys_batch()
+    fn = jax.jit(jax.vmap(
+        lambda s, p: sim._run(s, 1000.0, 100000, params=p)))
+    hlo = fn.lower(sb, pb).compile().as_text()
+    assert not _scatters(hlo), _scatters(hlo)
+
+
+def _family_batch():
+    """A masked shape batch: lanes are different sub-shapes of one family
+    (the structural-DSE hot path)."""
+    fam = build_family(n_cores=4, pattern="mixed", n_reqs=8, donate=False)
+    shapes = [{"core": s} for s in (1, 2, 3, 4)]
+    pb = stack_params([fam.params_for(s) for s in shapes])
+    sb = stack_state_list([fam.state_for(s) for s in shapes])
+    return fam.sim, sb, pb
+
+
+def test_masked_batched_epoch_hlo_is_scatter_free():
+    sim, sb, pb = _family_batch()
+    fn = jax.jit(jax.vmap(sim._epoch))
+    hlo = fn.lower(sb, pb).compile().as_text()
+    assert not _scatters(hlo), _scatters(hlo)
+
+
+def test_masked_batched_full_run_hlo_is_scatter_free():
+    sim, sb, pb = _family_batch()
     fn = jax.jit(jax.vmap(
         lambda s, p: sim._run(s, 1000.0, 100000, params=p)))
     hlo = fn.lower(sb, pb).compile().as_text()

@@ -1,0 +1,175 @@
+"""Topology families (DSE.md): a padded build at the family maximum plus
+traced activity masks must be **bit-identical on active rows** to an
+unpadded build of each sub-shape — the invariant that makes structural
+(shape-axis) sweeps trustworthy.
+
+Active-row observables: virtual time, scalar Stats, per-kind component
+state rows, per-kind port *counts*, and the per-kind ``next_tick`` /
+``busy`` slices.  Raw ring-buffer words are excluded by design — messages
+carry global port ids, which are build-relative (the padded build numbers
+ports differently), so buffer bytes are representation, not observation.
+
+Shapes are exercised both through single masked runs and through the real
+mechanism — one vmapped batch whose lanes are different shapes of one
+compiled family — and ``run_sweep`` must build/compile once per family,
+not once per shape.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.dse import (BatchRunner, SweepSpec, run_sweep, stack_params,
+                       stack_state_list)
+from repro.sims import onira
+from repro.sims.memsys import build, build_family, finish_stats
+
+PATTERNS = ["compute", "stream", "pointer", "idle_half", "mixed"]
+STAT_FIELDS = ("epochs", "ticks", "progress_ticks", "delivered")
+N_MAX = 4
+
+
+def assert_active_rows_identical(fam_sim, fam_out, ref_sim, ref_out,
+                                 counts):
+    assert float(fam_out.time) == float(ref_out.time)
+    for f in STAT_FIELDS:
+        assert int(getattr(fam_out.stats, f)) == \
+            int(getattr(ref_out.stats, f)), f
+    for k in ref_sim.kinds:
+        n = counts.get(k.name, k.n_instances)
+        fb, rb = fam_sim.comp_id(k.name, 0), ref_sim.comp_id(k.name, 0)
+        np.testing.assert_array_equal(
+            np.asarray(fam_out.next_tick)[fb:fb + n],
+            np.asarray(ref_out.next_tick)[rb:rb + n], err_msg=k.name)
+        np.testing.assert_array_equal(
+            np.asarray(fam_out.stats.busy)[fb:fb + n],
+            np.asarray(ref_out.stats.busy)[rb:rb + n], err_msg=k.name)
+        for leaf in ref_out.comp_state[k.name]:
+            np.testing.assert_array_equal(
+                np.asarray(fam_out.comp_state[k.name][leaf])[:n],
+                np.asarray(ref_out.comp_state[k.name][leaf])[:n],
+                err_msg=f"{k.name}.{leaf}")
+        np_act = n * k.n_ports
+        for seg_f, seg_r in ((fam_out.in_cnt, ref_out.in_cnt),
+                             (fam_out.out_cnt, ref_out.out_cnt)):
+            np.testing.assert_array_equal(
+                np.asarray(seg_f[k.name])[:np_act],
+                np.asarray(seg_r[k.name])[:np_act], err_msg=k.name)
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_memsys_family_lanes_match_unpadded_builds(pattern):
+    """One vmapped family batch, one lane per shape, vs per-shape builds."""
+    shapes = [2, 4]
+    fam = build_family(n_cores=N_MAX, pattern=pattern, n_reqs=10,
+                       donate=False)
+    pb = stack_params([fam.params_for({"core": s}) for s in shapes])
+    sb = stack_state_list([fam.state_for({"core": s}) for s in shapes])
+    out = BatchRunner(fam.sim).run_batch(sb, pb, 20000.0)
+    for i, s in enumerate(shapes):
+        lane_out = jax.tree.map(lambda x: x[i], out)
+        ref_sim, ref_st = build(n_cores=s, pattern=pattern, n_reqs=10,
+                                donate=False)
+        ref = ref_sim.run(ref_st, until=20000.0)
+        assert_active_rows_identical(fam.sim, lane_out, ref_sim, ref,
+                                     {"core": s, "l1": s, "dram": 1})
+        stats = finish_stats(ref_sim, ref)
+        if pattern != "idle_half":
+            assert stats["reads_done"] > 0      # not vacuous
+        assert stats["remaining"] == 0
+
+
+def test_memsys_family_matches_unpadded_mid_flight():
+    """Equality must hold mid-run too (non-empty queues, finite wakes),
+    not just at the drained fixpoint."""
+    fam = build_family(n_cores=N_MAX, pattern="mixed", n_reqs=16,
+                       donate=False)
+    out = fam.sim.run(fam.state_for({"core": 2}), until=150.0,
+                      params=fam.params_for({"core": 2}))
+    ref_sim, ref_st = build(n_cores=2, pattern="mixed", n_reqs=16,
+                            donate=False)
+    ref = ref_sim.run(ref_st, until=150.0)
+    assert finish_stats(ref_sim, ref)["remaining"] > 0    # genuinely mid-run
+    assert_active_rows_identical(fam.sim, out, ref_sim, ref,
+                                 {"core": 2, "l1": 2, "dram": 1})
+
+
+def test_masked_rows_stay_inert_and_pinned():
+    fam = build_family(n_cores=N_MAX, pattern="stream", n_reqs=8,
+                       donate=False)
+    st = fam.state_for({"core": 2})
+    out = fam.sim.run(st, until=20000.0, params=fam.params_for({"core": 2}))
+    cs = out.comp_state
+    # masked cores never issued, masked L1s never served
+    assert np.asarray(cs["core"]["remaining"])[2:].tolist() == [0, 0]
+    assert np.asarray(cs["l1"]["hits"])[2:].tolist() == [0, 0]
+    assert np.asarray(cs["l1"]["misses"])[2:].tolist() == [0, 0]
+    assert not np.asarray(out.stats.busy)[2:N_MAX].any()
+    # pinned out of the next-event min
+    assert np.isinf(np.asarray(out.next_tick)[2:N_MAX]).all()
+
+
+def test_onira_family_cpi_matches_unpadded():
+    names = ["ALU", "RAW_HZD", "BR_LOOP", "IND_LD"]
+    progs = [onira.MICROBENCHES[n]() for n in names]
+    fam = onira.build_onira_family(progs, mem_latency=5.0)
+    for s in (1, 2, 4):
+        out = fam.sim.run(fam.state_for({"cpu": s}), until=20000.0,
+                          params=fam.params_for({"cpu": s}))
+        ref_sim, ref_st = onira.build_onira(progs[:s], mem_latency=5.0)
+        ref = ref_sim.run(ref_st, until=20000.0)
+        assert_active_rows_identical(fam.sim, out, ref_sim, ref,
+                                     {"cpu": s, "mem": s})
+        cs = out.comp_state["cpu"]
+        assert np.asarray(cs["done"])[:s].all()
+        for i in range(s):      # CPI still tracks the analytic model
+            cpi = float(cs["halt_time"][i]) / max(int(cs["retired"][i]), 1)
+            ref_cpi = onira.analytic_cpi(names[i])
+            assert abs(cpi - ref_cpi) / ref_cpi < 0.35, (names[i], cpi)
+
+
+# ---------------------------------------------------------------------------
+def test_run_sweep_shape_axes_build_once_per_family():
+    """A shape grid is ONE family build (and one compiled batch), not one
+    compile group per shape; static axes still split compile groups."""
+    calls = []
+
+    def build_fn(shape, super_epoch=None):
+        calls.append((dict(shape), super_epoch))
+        return build_family(shape=shape, n_cores=N_MAX, pattern="mixed",
+                            n_reqs=8, super_epoch=super_epoch)
+
+    spec = SweepSpec.grid({"shape.core": [1, 2, 4],
+                           "kind.l1.extra_hit_rate": [0.0, 0.5],
+                           "static.super_epoch": [1, 4]})
+    rows = run_sweep(build_fn, spec, until=50000.0,
+                     extract=lambda sim, s: finish_stats(sim, s))
+    # one family build per static group, each at the family max shape
+    assert calls == [({"core": 4}, 1), ({"core": 4}, 4)]
+    assert [r["shape.core"] for r in rows] == [1, 1, 1, 1, 2, 2, 2, 2,
+                                               4, 4, 4, 4]
+    assert all(r["remaining"] == 0 for r in rows)
+    # more active cores -> more DRAM reads served at hit_rate 0
+    served = {r["shape.core"]: r["reads_done"] for r in rows
+              if r["kind.l1.extra_hit_rate"] == 0.0
+              and r["static.super_epoch"] == 1}
+    assert served[1] < served[2] < served[4]
+    # super_epoch is observation-invariant across the family too
+    for i in range(0, len(rows), 2):
+        assert rows[i]["virtual_time"] == rows[i + 1]["virtual_time"]
+
+
+def test_family_shape_validation():
+    fam = build_family(n_cores=N_MAX, pattern="mixed", n_reqs=4)
+    with pytest.raises(ValueError, match="outside this family's range"):
+        fam.state_for({"core": N_MAX + 1})
+    with pytest.raises(ValueError, match="unknown shape axes"):
+        fam.params_for({"nope": 2})
+    # missing axes default to the family maximum
+    assert fam.full_shape({}) == {"core": N_MAX}
+
+
+def test_shape_axis_against_plain_simulation_is_rejected():
+    spec = SweepSpec.grid({"shape.core": [1, 2]})
+    sim, _ = build(n_cores=2, pattern="mixed", n_reqs=4, donate=False)
+    with pytest.raises(ValueError, match="topology family"):
+        spec.validate(sim)

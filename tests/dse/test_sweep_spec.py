@@ -81,6 +81,101 @@ def test_apply_point_rejects_out_of_range_index(sim):
         apply_point(sim.default_params(), {"conn_latency[99]": 2.0})
 
 
+# ---------------------------------------------------------------------------
+# eager axis-path validation (no deep KeyError mid-run_sweep)
+# ---------------------------------------------------------------------------
+def test_validate_names_bad_path_and_valid_axes(sim):
+    spec = SweepSpec.grid({"period.l1x": [1.0, 2.0]})
+    with pytest.raises(ValueError) as e:
+        spec.validate(sim)
+    msg = str(e.value)
+    assert "period.l1x" in msg          # the bad path, by name
+    assert "period.l1" in msg           # ...and the valid alternatives
+    assert "kind.l1.extra_hit_rate" in msg
+
+
+def test_validate_at_construction_via_validate_for(sim):
+    with pytest.raises(ValueError, match="nope"):
+        SweepSpec.grid({"nope": [1.0]}, validate_for=sim)
+    with pytest.raises(ValueError, match="kind.l1.no_leaf"):
+        SweepSpec.explicit([{"kind.l1.no_leaf": 0.5}], validate_for=sim)
+    with pytest.raises(ValueError, match="out of range"):
+        SweepSpec.random({"conn_latency[99]": (1.0, 2.0)}, n=2,
+                         validate_for=sim)
+
+
+def test_validate_accepts_every_documented_axis_form(sim):
+    spec = SweepSpec.explicit([{
+        "conn_latency": 2.0, "conn_latency[-1]": 10.0,
+        "period.dram": 2.0, "period.core[0]": 2.0,
+        "kind.l1.extra_hit_rate": 0.5,
+        "static.super_epoch": 2}])
+    assert spec.validate(sim) is spec                   # chains
+    # static axes are checked only against an explicit whitelist
+    spec.validate(sim, static_ok=["super_epoch"])
+    with pytest.raises(ValueError, match="super_epoch"):
+        spec.validate(sim, static_ok=["other_kwarg"])
+
+
+def test_run_sweep_raises_eagerly_on_unknown_traced_axis(sim):
+    from repro.dse import run_sweep
+    from repro.sims.memsys import build
+    spec = SweepSpec.grid({"period.l1x": [1.0, 2.0]})
+    with pytest.raises(ValueError, match="period.l1x"):
+        run_sweep(lambda: build(n_cores=2, pattern="mixed", n_reqs=4),
+                  spec, until=100.0)
+
+
+def test_run_sweep_rejects_unknown_static_kwarg_before_building():
+    from repro.dse import run_sweep
+    builds = []
+
+    def build_fn(super_epoch=None):
+        builds.append(super_epoch)
+        raise AssertionError("must not build")
+
+    spec = SweepSpec.grid({"static.super_epok": [1]})
+    with pytest.raises(ValueError, match="super_epok"):
+        run_sweep(build_fn, spec, until=100.0)
+    assert builds == []
+
+
+def test_run_sweep_validates_each_static_group_against_its_own_build():
+    """Axis paths are checked per compile group: an index that is only
+    valid for the larger topology must not fail against the smaller
+    group's sim (and vice versa must still be caught)."""
+    from repro.dse import run_sweep
+    from repro.sims.memsys import build
+
+    def build_fn(n_cores):
+        return build(n_cores=n_cores, pattern="mixed", n_reqs=4,
+                     donate=False)
+
+    # n_cores=2 -> 3 connections, n_cores=3 -> 4: conn_latency[3] only
+    # exists in the second group
+    spec = SweepSpec.explicit([
+        {"static.n_cores": 2, "conn_latency[-1]": 10.0},
+        {"static.n_cores": 3, "conn_latency[3]": 10.0}])
+    rows = run_sweep(build_fn, spec, until=20000.0)
+    assert len(rows) == 2 and all(r["epochs"] > 0 for r in rows)
+
+    bad = SweepSpec.explicit([{"static.n_cores": 2, "conn_latency[3]": 1.0}])
+    with pytest.raises(ValueError, match="out of range"):
+        run_sweep(build_fn, bad, until=100.0)
+
+
+def test_split_shape_strips_prefix():
+    from repro.dse import split_shape
+    shape, traced = split_shape({"shape.core": 4, "conn_latency": 5.0})
+    assert shape == {"core": 4}
+    assert traced == {"conn_latency": 5.0}
+
+
+def test_apply_point_rejects_shape_axes(sim):
+    with pytest.raises(KeyError, match="TopologyFamily"):
+        apply_point(sim.default_params(), {"shape.core": 2})
+
+
 def test_stack_params_shapes(sim):
     spec = SweepSpec.grid({"conn_latency[-1]": [10.0, 20.0, 40.0]})
     pb = build_param_batch(sim, list(spec))
