@@ -387,8 +387,10 @@ class Simulation:
         self._acm = np.arange(CM, dtype=np.int32)                 # [C*M]
         self._build_kind_consts()
         self._dp = self.default_params()
-        self._jit_kwargs: dict[str, Any] = dict(
-            static_argnames=("max_epochs",))
+        # until/max_epochs are traced operands (not static): one compiled
+        # loop serves every horizon and epoch budget, and repro.dse can
+        # vmap them per lane so each lane freezes at its own horizon.
+        self._jit_kwargs: dict[str, Any] = {}
         if donate:
             self._jit_kwargs["donate_argnums"] = (0,)
         self._run_jit = jax.jit(self._run, **self._jit_kwargs)
@@ -843,6 +845,11 @@ class Simulation:
         return t
 
     def _live(self, s: SimState, until, max_epochs):
+        """Liveness predicate of the hot loop: events remain before the
+        horizon AND the epoch budget is not exhausted.  ``until`` and
+        ``max_epochs`` are ordinary traced operands, so ``repro.dse`` can
+        vmap this per lane (per-lane horizons) and poll it cheaply between
+        rounds without recompiling anything."""
         if self.naive:
             more = s.time <= until + EPS
         else:
@@ -853,6 +860,7 @@ class Simulation:
              params: SimParams | None = None):
         P = self._dp if params is None else params
         until = jnp.asarray(until, jnp.float32)
+        max_epochs = jnp.asarray(max_epochs, jnp.int32)
         cond = lambda s: self._live(s, until, max_epochs)
         if self.super_epoch <= 1:
             return jax.lax.while_loop(cond, lambda s: self._epoch(s, P), s)
@@ -882,6 +890,11 @@ class Simulation:
         ``state``'s buffers are donated to the jitted loop and must not be
         reused afterwards — keep using the *returned* state, or pass
         ``copy_state(state)`` if the input must survive.
+
+        ``until`` and ``max_epochs`` are *traced* operands: changing
+        either re-runs the same compiled loop (no recompile), and batched
+        runs (``repro.dse``) may pass per-lane values so every lane
+        freezes at its own horizon / epoch budget.
 
         ``params`` (optional) overrides the traced timing/model parameters
         for this run (see :class:`SimParams` / ``default_params()``); its

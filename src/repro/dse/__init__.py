@@ -14,8 +14,13 @@ sweep subsystem:
     masks, so instance counts / wiring sweep without recompiling;
   * :mod:`~repro.dse.runner` — ``BatchRunner`` / ``run_sweep``: one jitted
     ``vmap`` of the fused hot loop simulates hundreds of configs at once
-    (chunked for B >> memory, optionally pmapped over devices); shape
-    axes lower to mask batches grouped per family, not compile groups;
+    with *per-lane horizons* (``until`` / ``max_epochs`` are traced
+    per-lane operands); ``run_rounds`` streams arbitrary B straggler-free
+    through rounds + lane compaction (optionally pmapped over devices);
+    shape axes lower to mask batches grouped per family, not compile
+    groups;
+  * :mod:`~repro.dse.schedule` — the chunk ladder, epoch-quantum policy
+    and the one-shot chunk-size autotuner behind ``run_rounds``;
   * :mod:`~repro.dse.report` — tidy rows, Pareto-front extraction and
     JSON/CSV export.
 
@@ -26,8 +31,10 @@ of its shape — the invariants that make sweep results trustworthy
 """
 from .family import TopologyFamily
 from .report import format_table, pareto_front, tidy, to_csv, to_json
-from .runner import (BatchRunner, default_extract, lane, run_sweep,
-                     stack_state_list, stack_states)
+from .runner import (BatchRunner, default_extract, extract_rows, lane,
+                     run_sweep, runner_for, stack_state_list, stack_states)
+from .schedule import ChunkAutotuner, ChunkSchedule, auto_schedule, \
+    make_ladder
 from .sweep import (SweepSpec, apply_point, axis_error, build_param_batch,
                     split_shape, stack_params, valid_axes)
 
@@ -35,6 +42,7 @@ __all__ = [
     "SweepSpec", "apply_point", "axis_error", "valid_axes",
     "build_param_batch", "stack_params", "split_shape", "TopologyFamily",
     "BatchRunner", "run_sweep", "stack_states", "stack_state_list", "lane",
-    "default_extract",
+    "default_extract", "extract_rows", "runner_for",
+    "ChunkSchedule", "ChunkAutotuner", "auto_schedule", "make_ladder",
     "pareto_front", "tidy", "to_csv", "to_json", "format_table",
 ]

@@ -23,6 +23,14 @@ The masks act in the hot loop through broadcast ``&``/``where`` selects
 only — never as gather/scatter indices — so the scatter-free property
 (ENGINE_PERF.md) survives shape batching; pinned by
 ``tests/dse/test_scatter_free.py`` on the optimized HLO.
+
+Masked lanes compose with *per-lane horizons* (runner/DSE.md "Rounds
+and the chunk ladder") with no family-side work: a masked instance is
+pinned to ``next_tick = +inf``, so it simply never contributes to the
+next-event min that decides when the lane reaches its own ``until`` —
+mixed sub-shapes at mixed horizons ride the same round/compaction loop
+(pinned bit-identical by ``tests/dse/test_rounds.py``, scatter-free on
+the masked per-lane-horizon HLO by ``test_scatter_free.py``).
 """
 from __future__ import annotations
 

@@ -2,40 +2,60 @@
 stacked :class:`~repro.core.SimParams` batch.
 
 One jitted program simulates every design point of a topology at once:
-``jax.vmap`` maps the ``while_loop`` body over the config axis (lanes whose
-horizon/workload is exhausted are frozen by the loop's batching rule, so a
-B=1 batch is *bit-identical* to the unbatched engine — the invariant pinned
-by ``tests/dse``).  Params enter the loop as broadcast operands only, so
-the scatter-free hot-loop property (ENGINE_PERF.md) survives batching.
+``jax.vmap`` maps the ``while_loop`` body over the config axis.  The
+horizon and epoch budget are *traced per-lane operands* — each lane
+freezes bit-exactly at its own ``until`` / ``max_epochs`` (the batching
+rule selects the old carry for finished lanes), so a B=1 batch is
+*bit-identical* to the unbatched engine and mixed-horizon lanes are
+first-class.  Params enter the loop as broadcast operands only, so the
+scatter-free hot-loop property (ENGINE_PERF.md) survives batching.
 
-Execution knobs:
+Execution strategies, cheapest lane-waste first:
 
-* **Chunking** — ``chunk=`` splits B into fixed-size slabs so B >> memory
-  (or >> useful vector width) still runs; every slab reuses the same
-  compiled program (the last one is padded, padding lanes discarded).
-* **Sharding** — ``shard=True`` pmaps the chunk over local devices (the
+* **Rounds** (``run_rounds``, what ``run_sweep`` uses) — the
+  straggler-free path: run a bounded epoch *quantum*, pull the cheap
+  per-lane liveness vector to host, drop finished lanes, compact the
+  survivors (a device gather outside the jitted loop) into a rung of the
+  geometric **chunk ladder** (``repro.dse.schedule``) and refill from the
+  pending-config queue.  A monolithic batch runs every lane to the
+  *slowest* lane's horizon — finished lanes burn full masked epochs — and
+  large B can fall below sequential shared-jit throughput; rounds stream
+  arbitrary B through a handful of cached executables (one per rung, zero
+  recompiles after warmup) at the autotuned batch width.
+* **Chunking** — ``run_chunked(chunk=...)`` splits B into fixed-size
+  slabs (no mid-run compaction); the final partial slab is padded with
+  *zero-horizon* lanes that freeze on entry instead of re-simulating the
+  repeated tail point.
+* **Sharding** — ``shard=True`` pmaps a batch over local devices (the
   config axis is embarrassingly parallel); with one device this is the
   plain vmap path.  Multi-host sharding is future work (ROADMAP).
-* **Donation** — batched states are donated into the loop exactly like the
-  unbatched engine (build knob ``donate=``); ``stack_states`` materializes
-  fresh per-lane copies so no lane aliases another lane or the template
-  state (donating an aliased batch would corrupt sibling configs).
+* **Donation** — batched states are donated into the loop exactly like
+  the unbatched engine (build knob ``donate=``); ``stack_states``
+  materializes fresh per-lane copies so no lane aliases another lane or
+  the template state (donating an aliased batch would corrupt sibling
+  configs).
 """
 from __future__ import annotations
 
 import dataclasses
 import inspect
-from typing import Any, Callable, Sequence
+import time
+import weakref
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import SimParams, SimState, Stats, check_not_consumed
+from repro.core import SimParams, SimState, check_not_consumed
 
 from .family import TopologyFamily
+from .schedule import ChunkSchedule, ChunkAutotuner, auto_schedule
 from .sweep import (STATIC_PREFIX, SweepSpec, apply_point,
                     build_param_batch, split_shape, stack_params,
                     stack_trees)
+
+INT32_MAX = np.int32(2**31 - 1)
 
 
 def stack_states(state: SimState, n: int) -> SimState:
@@ -55,12 +75,20 @@ def stack_state_list(states: Sequence[SimState]) -> SimState:
 
 
 def lane(tree, i: int):
-    """Extract config ``i``'s slice from a batched pytree (host-side)."""
+    """Extract config ``i``'s slice from a batched pytree (device- or
+    host-side — works on jax arrays and on the numpy tree a single
+    ``jax.device_get`` returns)."""
     return jax.tree.map(lambda x: x[i], tree)
 
 
 def default_extract(sim, s: SimState) -> dict:
-    """Per-config scalar results: virtual time + engine counters."""
+    """Per-config scalar results: virtual time + engine counters.
+
+    ``run_sweep`` hands this *host-side* lanes (one ``jax.device_get``
+    of the whole chunk, sliced on host), so the ``float()``/``int()``
+    casts below are free; on a raw device lane each cast would be its
+    own device→host sync.
+    """
     return {
         "virtual_time": float(s.time),
         "epochs": int(s.stats.epochs),
@@ -70,44 +98,86 @@ def default_extract(sim, s: SimState) -> dict:
     }
 
 
+def extract_rows(sim, out_b: SimState, n: int,
+                 extract: Callable | None = None) -> list[dict]:
+    """Extract ``n`` result rows from a batched final state with a single
+    device→host transfer.
+
+    One ``jax.device_get`` pulls the whole stacked tree at once; lanes
+    are then sliced on host, so an extractor touching k scalar fields
+    costs 1 transfer total instead of ``n * k`` syncs.
+    """
+    extract = extract or default_extract
+    host = jax.device_get(out_b)
+    return [extract(sim, lane(host, j)) for j in range(n)]
+
+
+def _vec(x, b: int, dtype) -> jax.Array:
+    """Broadcast a scalar-or-per-lane operand to a strong-typed [b]
+    vector (one dtype/shape signature per batch size => no retraces)."""
+    a = np.broadcast_to(np.asarray(x, dtype), (b,))
+    return jnp.asarray(np.ascontiguousarray(a))
+
+
+def _horizons(until, max_epochs, b: int) -> tuple[np.ndarray, np.ndarray]:
+    """Normalize scalar-or-per-lane horizons to host vectors: [b] f32
+    ``until`` and [b] i32 ``max_epochs`` (budgets beyond int32 clamp —
+    the engine's epoch counter is i32, so the clamp is exact)."""
+    u = np.broadcast_to(np.asarray(until, np.float32), (b,)) \
+        .astype(np.float32)
+    m = np.broadcast_to(
+        np.minimum(np.asarray(max_epochs, np.int64), INT32_MAX)
+        .astype(np.int32), (b,)).astype(np.int32)
+    return u, m
+
+
 class BatchRunner:
     """Compiled batched runs over one :class:`Simulation`'s design space.
 
-    Jitted executables are cached per (batch size, max_epochs, shard)
-    triple, so chunked sweeps and repeated calls never recompile.
+    Jitted executables are cached per (batch size, shard) — the horizon
+    and epoch budget are traced per-lane operands, so neither ``until``
+    nor ``max_epochs`` keys the cache and chunk-ladder rounds never
+    recompile after warmup.  ``trace_count`` counts actual retraces
+    (each jit compile runs the wrapped python once) and is pinned by
+    ``tests/dse/test_rounds.py``.
     """
 
     def __init__(self, sim):
         self.sim = sim
         self._fns: dict[tuple, Callable] = {}
+        self.trace_count = 0          # python re-traces == XLA compiles
+        self._tuned_top: dict[bool, int] = {}   # shard -> autotuned rung
+        self.last_rounds: dict | None = None    # diagnostics of last run
 
     # ------------------------------------------------------------------
-    def _batched_fn(self, b: int, max_epochs: int, shard: bool):
-        key = (b, max_epochs, shard)
+    def _batched_fn(self, b: int, shard: bool):
+        key = (b, shard)
         fn = self._fns.get(key)
         if fn is not None:
             return fn
         sim = self.sim
 
-        def one(s, p, u):
-            return sim._run(s, u, max_epochs, params=p)
+        def one(s, p, u, m):
+            self.trace_count += 1     # runs only while (re)tracing
+            return sim._run(s, u, m, params=p)
 
-        vm = jax.vmap(one, in_axes=(0, 0, None))
+        vm = jax.vmap(one, in_axes=(0, 0, 0, 0))
         if shard and jax.local_device_count() > 1:
             d = jax.local_device_count()
             while b % d:
                 d -= 1            # largest divisor of B we can pmap over
 
-            pm = jax.pmap(vm, in_axes=(0, 0, None),
+            pm = jax.pmap(vm, in_axes=(0, 0, 0, 0),
                           donate_argnums=(0,) if sim.donate else ())
 
-            def fn(sb, pb, u, d=d):
+            def fn(sb, pb, u, m, d=d):
                 # the per-device reshaped copy is what gets donated here —
                 # callers must still treat sb as consumed, but its leaves
                 # may not be observably deleted on the pmap path
                 fold = lambda x: x.reshape((d, b // d) + x.shape[1:])
                 unfold = lambda x: x.reshape((b,) + x.shape[2:])
-                out = pm(jax.tree.map(fold, sb), jax.tree.map(fold, pb), u)
+                out = pm(jax.tree.map(fold, sb), jax.tree.map(fold, pb),
+                         fold(u), fold(m))
                 return jax.tree.map(unfold, out)
         else:
             fn = jax.jit(
@@ -115,11 +185,37 @@ class BatchRunner:
         self._fns[key] = fn
         return fn
 
+    def _liveness(self, out_b: SimState, u_vec, budget_vec):
+        """Per-lane ``(live, epochs)`` of a batched state, fetched to host
+        in one transfer.  ``live`` means the lane still has events before
+        its horizon and epoch budget — the round loop's compaction key."""
+        b = int(out_b.time.shape[0])
+        key = ("live", b)
+        fn = self._fns.get(key)
+        if fn is None:
+            sim = self.sim
+
+            def one(s, u, m):
+                self.trace_count += 1
+                return sim._live(s, u, m), s.stats.epochs
+
+            fn = jax.jit(jax.vmap(one))
+            self._fns[key] = fn
+        live, ep = fn(out_b, _vec(u_vec, b, np.float32),
+                      _vec(budget_vec, b, np.int32))
+        return jax.device_get((live, ep))
+
     # ------------------------------------------------------------------
     def run_batch(self, states_b: SimState, params_b: SimParams,
-                  until: float, max_epochs: int = 2_000_000,
+                  until, max_epochs=2_000_000,
                   shard: bool = False) -> SimState:
         """One vmapped jitted run of a pre-stacked batch.
+
+        ``until`` and ``max_epochs`` may be scalars (shared by every
+        lane) or per-lane vectors of length B — each lane freezes
+        bit-exactly at its own horizon / budget (stragglers excepted,
+        the loop still *iterates* until the slowest lane is done; use
+        :meth:`run_rounds` to reclaim that waste).
 
         ``states_b`` is donated when the simulation was built with
         ``donate=True`` — treat it as consumed (see ``stack_states`` /
@@ -129,55 +225,271 @@ class BatchRunner:
         if self.sim.donate:
             check_not_consumed(states_b)
         b = int(params_b.conn_latency.shape[0])
-        fn = self._batched_fn(b, max_epochs, shard)
-        return fn(states_b, params_b, jnp.float32(until))
+        fn = self._batched_fn(b, shard)
+        u, m = _horizons(until, max_epochs, b)
+        return fn(states_b, params_b, jnp.asarray(u), jnp.asarray(m))
 
     # ------------------------------------------------------------------
     def run_chunked(self, template: SimState | Sequence[SimState],
-                    params_b: SimParams, until: float,
+                    params_b: SimParams, until,
                     chunk: int | None = None,
-                    max_epochs: int = 2_000_000,
+                    max_epochs=2_000_000,
                     shard: bool = False) -> SimState:
         """Run a B-point batch in fixed-size chunks of fresh state stacks.
 
         ``template`` is either one ``SimState`` (every lane starts from a
         fresh copy of it) or a sequence of B per-lane states (topology
         families: each lane's initial state encodes its sub-shape's
-        workload).  All chunks share one compiled executable; the final
-        partial chunk is padded by repeating its last point and the
-        padding lanes are dropped from the result.  Returns the stacked
-        final states in point order.
+        workload).  ``until`` / ``max_epochs`` may be per-lane vectors.
+        All chunks share one compiled executable; the final partial chunk
+        is padded by repeating its last point with a **zero horizon and
+        zero epoch budget** — padding lanes freeze on entry instead of
+        re-simulating the tail point at full horizon — and the padding
+        lanes are dropped from the result.  Returns the stacked final
+        states in point order.
         """
         B = int(params_b.conn_latency.shape[0])
         per_lane = isinstance(template, (list, tuple))
         if per_lane:
             assert len(template) == B, (len(template), B)
+        u, m = _horizons(until, max_epochs, B)
         chunk = B if chunk is None else max(1, min(int(chunk), B))
         outs = []
         for lo in range(0, B, chunk):
             hi = min(lo + chunk, B)
             part = jax.tree.map(lambda x: x[lo:hi], params_b)
-            if hi - lo < chunk:   # pad: repeat the last point
-                pad = chunk - (hi - lo)
-                part = jax.tree.map(
-                    lambda x: jnp.concatenate(
-                        [x] + [x[-1:]] * pad), part)
+            pad = chunk - (hi - lo)
+            u_p, m_p = u[lo:hi], m[lo:hi]
+            if pad:                   # repeat the last point's row shape,
+                part = jax.tree.map(  # but freeze it: until=0, budget=0
+                    lambda x: jnp.concatenate([x] + [x[-1:]] * pad), part)
+                u_p = np.concatenate([u_p, np.zeros(pad, np.float32)])
+                m_p = np.concatenate([m_p, np.zeros(pad, np.int32)])
             if per_lane:
                 lanes = list(template[lo:hi])
-                lanes += [lanes[-1]] * (chunk - len(lanes))
+                lanes += [lanes[-1]] * pad
                 sb = stack_state_list(lanes)
             else:
                 sb = stack_states(template, chunk)
-            out = self.run_batch(sb, part, until, max_epochs, shard)
-            if hi - lo < chunk:
+            out = self.run_batch(sb, part, u_p, m_p, shard)
+            if pad:
                 out = jax.tree.map(lambda x: x[:hi - lo], out)
             outs.append(out)
         if len(outs) == 1:
             return outs[0]
         return jax.tree.map(lambda *xs: jnp.concatenate(xs), *outs)
 
+    # ------------------------------------------------------------------
+    def warm_ladder(self, template: SimState | Sequence[SimState],
+                    params_b: SimParams, sizes: Sequence[int],
+                    shard: bool = False) -> None:
+        """Compile the run + liveness executables for the given batch
+        sizes without advancing any lane: a zero-horizon, zero-budget
+        batch traces and compiles the full program but executes no
+        epochs.  Benchmarks use this so a drain-phase rung can never
+        compile inside a timed region."""
+        t = template[0] if isinstance(template, (list, tuple)) else template
+        if self.sim.donate:
+            check_not_consumed(t)
+        for b in sizes:
+            row0 = jnp.zeros((b,), jnp.int32)
+            pb = jax.tree.map(lambda x: x[row0], params_b)
+            out = self.run_batch(stack_states(t, b), pb, 0.0, 0, shard)
+            self._liveness(out, np.zeros(b, np.float32),
+                           np.zeros(b, np.int32))
+
+    # ------------------------------------------------------------------
+    def run_rounds(self, template: SimState | Sequence[SimState],
+                   params_b: SimParams, until,
+                   schedule: ChunkSchedule | None = None,
+                   max_epochs=2_000_000,
+                   shard: bool = False) -> SimState:
+        """Straggler-free streaming run: rounds + lane compaction + the
+        chunk ladder (DSE.md "Rounds and the chunk ladder").
+
+        Each round runs one epoch *quantum* of a ladder-sized batch,
+        pulls the per-lane liveness vector to host (one tiny transfer),
+        records finished lanes, compacts survivors (a device gather on
+        the batch axis — outside the jitted loop, so the hot loop stays
+        scatter-free) and refills from the pending-config queue.  Lanes
+        are independent under vmap and freeze bit-exactly at their own
+        horizons, so the result is **bit-identical** to a single
+        full-batch :meth:`run_batch` at per-lane ``until`` — rounds only
+        change wall-clock (pinned by ``tests/dse/test_rounds.py``).
+
+        ``schedule`` defaults to :func:`~repro.dse.schedule.auto_schedule`
+        — with a one-shot chunk autotune for large B whose winning rung
+        is cached on this runner, so later calls skip the probe.
+        Returns the stacked final states in point order.
+        """
+        B = int(params_b.conn_latency.shape[0])
+        per_lane = isinstance(template, (list, tuple))
+        if per_lane:
+            assert len(template) == B, (len(template), B)
+        if self.sim.donate:      # catch consumed templates up front, not
+            for t in (template if per_lane else [template]):  # mid-round
+                check_not_consumed(t)
+        u, budget = _horizons(until, max_epochs, B)
+        if schedule is None:
+            schedule = auto_schedule(B)
+            tuned = self._tuned_top.get(shard)
+            if tuned is not None:
+                schedule = schedule.narrowed(tuned)
+        else:
+            schedule = dataclasses.replace(schedule)   # never mutate input
+
+        ep = np.zeros(B, np.int64)          # per-lane epochs so far
+        done: list[tuple[list[int], SimState]] = []   # finished segments
+        pending = list(range(B))            # configs not yet started
+        pool: list[tuple[list[int], SimState]] = []   # alive, unscheduled
+        tuner = (ChunkAutotuner(schedule, len(pending))
+                 if schedule.autotune else None)
+        pad_template = template[0] if per_lane else template
+        n_rounds = 0
+
+        def fresh(ids):
+            if per_lane:
+                return stack_state_list([template[i] for i in ids])
+            return stack_states(template, len(ids))
+
+        while pool or pending:
+            n_alive = sum(len(ids) for ids, _ in pool)
+            remaining = n_alive + len(pending)
+            rung = None
+            if tuner is not None:
+                rung = tuner.next_probe(remaining)
+                if rung is None:              # probing done: pick winner
+                    top = tuner.best(schedule.top)
+                    schedule = schedule.narrowed(top)
+                    self._tuned_top[shard] = top
+                    tuner = None
+            C = rung if rung is not None else schedule.size_for(remaining)
+            # Endgame: once everything left fits the smallest rung there
+            # is nothing to compact *into* and no queue to refill from —
+            # quantum rounds would be pure overhead, so run to the full
+            # budget in one round (this is also the whole story for
+            # B <= the smallest rung: one round, monolithic-equivalent).
+            endgame = (tuner is None and remaining <= schedule.ladder[-1])
+
+            # --- assemble the round's batch: survivors, refill, pad ----
+            parts, ids = [], []
+            room = C
+            while pool and room:
+                seg_ids, seg = pool[0]
+                if len(seg_ids) <= room:
+                    pool.pop(0)
+                    parts.append(seg)
+                    ids += seg_ids
+                    room -= len(seg_ids)
+                else:                 # split a segment across rounds
+                    parts.append(jax.tree.map(lambda x: x[:room], seg))
+                    pool[0] = (seg_ids[room:],
+                               jax.tree.map(lambda x: x[room:], seg))
+                    ids += seg_ids[:room]
+                    room = 0
+            n_fresh = min(room, len(pending))
+            if n_fresh:
+                take, pending = pending[:n_fresh], pending[n_fresh:]
+                parts.append(fresh(take))
+                ids += take
+                room -= n_fresh
+            if room:                  # zero-horizon padding: freezes on
+                parts.append(stack_states(pad_template, room))  # entry
+                ids += [-1] * room
+            sb = (parts[0] if len(parts) == 1 else
+                  jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts))
+
+            rows = np.asarray(ids, np.int32)
+            live_row = rows >= 0
+            ridx = np.where(live_row, rows, 0)
+            if C == B and np.array_equal(ridx, np.arange(B)):
+                pb = params_b         # identity round: skip the gather
+            else:
+                pb = jax.tree.map(lambda x: x[jnp.asarray(ridx)], params_b)
+            u_vec = np.where(live_row, u[ridx], 0.0).astype(np.float32)
+            cap = budget[ridx].astype(np.int64) if endgame else \
+                np.minimum(ep[ridx] + schedule.quantum,
+                           budget[ridx].astype(np.int64))
+            m_vec = np.where(live_row, cap, 0).astype(np.int32)
+            b_vec = np.where(live_row, budget[ridx], 0).astype(np.int32)
+
+            t0 = time.perf_counter()
+            out = self.run_batch(sb, pb, u_vec, m_vec, shard)
+            live, ep_c = self._liveness(out, u_vec, b_vec)   # host sync
+            dt = time.perf_counter() - t0
+
+            surv_rows, surv_ids = [], []
+            fin_rows, fin_ids = [], []
+            for j, i in enumerate(ids):
+                if i < 0:
+                    continue
+                ep[i] = int(ep_c[j])
+                if live[j]:
+                    surv_rows.append(j)
+                    surv_ids.append(i)
+                else:
+                    fin_rows.append(j)
+                    fin_ids.append(i)
+            # compaction / harvest: one gather per leaf per group (lane
+            # slicing per config would be ~leaves x lanes dispatches);
+            # a round the whole batch finishes (or survives) needs none
+            if fin_rows:
+                if len(fin_rows) == C:
+                    done.append((fin_ids, out))
+                else:
+                    g = jnp.asarray(np.asarray(fin_rows, np.int32))
+                    done.append((fin_ids,
+                                 jax.tree.map(lambda x: x[g], out)))
+            if surv_rows:
+                if len(surv_rows) == C:
+                    pool.append((surv_ids, out))
+                else:
+                    g = jnp.asarray(np.asarray(surv_rows, np.int32))
+                    pool.append((surv_ids,
+                                 jax.tree.map(lambda x: x[g], out)))
+            if tuner is not None:
+                tuner.record(C, dt, lanes=int(np.sum(live_row)))
+            else:
+                schedule.grow_quantum(dt)
+            n_rounds += 1
+
+        self.last_rounds = {"rounds": n_rounds, "chunk": schedule.top,
+                            "quantum": schedule.quantum,
+                            "trace_count": self.trace_count}
+        # final assembly in point order: concat the finished segments
+        # once, then one gather per leaf restores lane order
+        all_ids = np.asarray([i for ids, _ in done for i in ids], np.int32)
+        full = (done[0][1] if len(done) == 1 else
+                jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                             *[t for _, t in done]))
+        if np.array_equal(all_ids, np.arange(B)):
+            return full               # already in point order
+        pos = np.empty(B, np.int32)
+        pos[all_ids] = np.arange(B, dtype=np.int32)
+        g = jnp.asarray(pos)
+        return jax.tree.map(lambda x: x[g], full)
+
 
 # ---------------------------------------------------------------------------
+_RUNNERS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def runner_for(sim) -> BatchRunner:
+    """The shared :class:`BatchRunner` of a simulation (weak-keyed, so
+    dropping the sim drops its runner and executables).
+
+    ``run_sweep`` uses this instead of a private runner per call: when a
+    build function memoizes and returns the *same* ``Simulation`` again,
+    repeat sweeps reuse its compiled rungs and autotuned chunk instead
+    of re-jitting and re-probing (a build function that rebuilds per
+    call compiles fresh either way — structure is the compile key).
+    """
+    r = _RUNNERS.get(sim)
+    if r is None:
+        r = _RUNNERS[sim] = BatchRunner(sim)
+    return r
+
+
 def _static_kwarg_names(build_fn) -> list[str] | None:
     """Keyword names ``build_fn`` accepts, or None if it takes **kwargs
     (then any ``static.*`` axis must be assumed valid)."""
@@ -193,17 +505,29 @@ def _static_kwarg_names(build_fn) -> list[str] | None:
                           inspect.Parameter.KEYWORD_ONLY)]
 
 
-def run_sweep(build_fn: Callable, spec: SweepSpec, until: float,
+def run_sweep(build_fn: Callable, spec: SweepSpec, until,
               extract: Callable | None = None, chunk: int | None = None,
-              max_epochs: int = 2_000_000, shard: bool = False) -> list[dict]:
+              max_epochs: int = 2_000_000, shard: bool = False,
+              schedule: ChunkSchedule | None = None) -> list[dict]:
     """Simulate every design point of ``spec`` and return tidy result rows.
 
     ``build_fn(**static_kwargs) -> (sim, state)`` builds the topology; it
     is called once per distinct ``static.*`` axis combination (each such
     group compiles once and vmaps its traced points).  ``extract(sim,
     final_lane_state) -> dict`` pulls per-config results (default: engine
-    counters).  Rows come back in spec order, each the point's axis
-    assignment merged with its extracted results.
+    counters); lanes are handed to it *host-side* — one ``jax.device_get``
+    per chunk — so scalar casts in the extractor never sync.  Rows come
+    back in spec order, each the point's axis assignment merged with its
+    extracted results.
+
+    Execution is **round-based and straggler-free**
+    (:meth:`BatchRunner.run_rounds`): every group streams through the
+    chunk ladder with per-lane horizons, lane compaction and pending-
+    queue refill, so arbitrary B runs through a handful of cached
+    executables with zero recompiles after warmup.  ``chunk`` pins the
+    ladder's top rung (otherwise large groups autotune it); ``schedule``
+    overrides the whole policy.  ``until`` may be a scalar or a per-point
+    sequence (mixed horizons — e.g. successive-halving search rounds).
 
     **Topology families** (``shape.*`` axes, DSE.md): shape axes sweep
     instance counts / wiring *without* forming compile groups.  The
@@ -211,15 +535,20 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until: float,
     maximum per shape axis, and calls ``build_fn(**static_kwargs,
     shape={axis: max})``, which must return a
     :class:`~repro.dse.family.TopologyFamily`.  Every shape in the group
-    then runs as one lane of a single compiled vmapped batch — activity
-    masks and per-lane initial states select each sub-shape, so a
-    1..8-core grid costs one compile instead of one per shape.
+    then runs as lanes of the same ladder rungs — activity masks and
+    per-lane initial states select each sub-shape, and masked lanes
+    compose with per-lane horizons (a masked lane's next-event min
+    simply reaches its horizon earlier).
 
     All axis paths are validated before anything runs: unknown axes
     raise ``ValueError`` naming the path and the valid alternatives.
     """
-    extract = extract or default_extract
+    if chunk is not None and schedule is not None:
+        raise ValueError(
+            "pass either chunk= (pins the ladder top) or schedule= (the "
+            "whole policy), not both — a schedule carries its own ladder")
     rows: list[dict | None] = [None] * len(spec)
+    until_arr = np.broadcast_to(np.asarray(until, np.float32), (len(spec),))
     shape_mode = spec.has_shape_axes()
     static_ok = _static_kwarg_names(build_fn)
     if static_ok is not None:
@@ -234,6 +563,9 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until: float,
         # group's sim can differ structurally, e.g. static.n_cores, so
         # neither the whole-spec union nor a single target would do)
         group_spec = SweepSpec(tuple(traced))
+        u_group = until_arr[np.asarray(indices)]
+        sched = auto_schedule(len(indices), chunk=chunk) \
+            if schedule is None and chunk is not None else schedule
         if shape_mode:
             split = [split_shape(pt) for pt in traced]
             fam_shape: dict[str, int] = {}
@@ -264,19 +596,21 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until: float,
                     full, apply_point(base, traced_pt), masks=m))
                 states.append(fam.state_for(full, masks=m))
             params_b = stack_params(plist)
-            runner = BatchRunner(sim)
-            out = runner.run_chunked(states, params_b, until, chunk=chunk,
-                                     max_epochs=max_epochs, shard=shard)
+            runner = runner_for(sim)
+            out = runner.run_rounds(states, params_b, u_group,
+                                    schedule=sched, max_epochs=max_epochs,
+                                    shard=shard)
         else:
             sim, st = build_fn(**static_kwargs)
             group_spec.validate(sim)
             params_b = build_param_batch(sim, traced)
-            runner = BatchRunner(sim)
-            out = runner.run_chunked(st, params_b, until, chunk=chunk,
-                                     max_epochs=max_epochs, shard=shard)
-        out = jax.block_until_ready(out)
+            runner = runner_for(sim)
+            out = runner.run_rounds(st, params_b, u_group,
+                                    schedule=sched, max_epochs=max_epochs,
+                                    shard=shard)
+        group_rows = extract_rows(sim, out, len(indices), extract)
         for j, i in enumerate(indices):
             row = dict(spec.points[i])
-            row.update(extract(sim, lane(out, j)))
+            row.update(group_rows[j])
             rows[i] = row
     return list(rows)

@@ -1,0 +1,225 @@
+"""Straggler semantics of round-based execution (DSE.md "Rounds and the
+chunk ladder").
+
+The invariants that make the straggler-free path trustworthy:
+
+* per-lane horizons — a batched lane at ``until=u_i`` is bit-identical
+  to an unbatched run at ``u_i`` (vmap freezes each lane with selects);
+* rounds + compaction + refill are an *execution strategy*: the result
+  is bit-identical to one full-batch ``run_batch`` at the same per-lane
+  horizons, for plain batches and masked topology-family batches alike;
+* lane order is irrelevant (permutation invariance);
+* zero-horizon lanes (the chunk-padding trick) freeze on entry;
+* after ladder warmup, further rounds and repeat sweeps never recompile
+  (``trace_count`` counts actual retraces).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dse import (BatchRunner, ChunkSchedule, SweepSpec, apply_point,
+                       build_param_batch, lane, make_ladder, run_sweep,
+                       stack_params, stack_state_list, stack_states)
+from repro.sims.memsys import build, build_family
+
+B = 6
+POINTS = [{"conn_latency[-1]": float(v)} for v in (10, 15, 20, 25, 30, 35)]
+# mixed per-lane horizons with an ~8x straggler spread (and one lane that
+# drains long before its horizon)
+UNTILS = np.asarray([200.0, 400.0, 800.0, 1600.0, 300.0, 50.0], np.float32)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    sim, st = build(n_cores=4, pattern="mixed", n_reqs=8, donate=True)
+    runner = BatchRunner(sim)
+    pb = build_param_batch(sim, POINTS)
+    return sim, st, runner, pb
+
+
+def _small_rounds():
+    """A schedule that forces several rounds and real compaction."""
+    return ChunkSchedule(make_ladder(B, top=3), quantum=32)
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+def test_per_lane_horizons_match_individual_runs():
+    """Lane i of a mixed-horizon batch == an unbatched run at until_i."""
+    sim, st = build(n_cores=4, pattern="mixed", n_reqs=8, donate=False)
+    pb = build_param_batch(sim, POINTS)
+    out = BatchRunner(sim).run_batch(stack_states(st, B), pb, UNTILS)
+    base = sim.default_params()
+    for i in range(B):
+        ref = sim._run_jit(sim.copy_state(st), float(UNTILS[i]), 2_000_000,
+                           params=apply_point(base, POINTS[i]))
+        _assert_tree_equal(lane(out, i), ref)
+
+
+def test_rounds_bit_identical_to_full_batch_mixed_horizons(ctx):
+    sim, st, runner, pb = ctx
+    full = runner.run_batch(stack_states(st, B), pb, UNTILS)
+    rounds = runner.run_rounds(st, pb, UNTILS, schedule=_small_rounds())
+    assert runner.last_rounds["rounds"] > 2   # compaction actually ran
+    _assert_tree_equal(full, rounds)
+
+
+def test_rounds_lane_permutation_invariance(ctx):
+    sim, st, runner, pb = ctx
+    base = runner.run_rounds(st, pb, UNTILS, schedule=_small_rounds())
+    perm = np.asarray([3, 1, 5, 0, 4, 2])
+    pb_p = jax.tree.map(lambda x: x[jnp.asarray(perm)], pb)
+    out_p = runner.run_rounds(st, pb_p, UNTILS[perm],
+                              schedule=_small_rounds())
+    for j, i in enumerate(perm):
+        _assert_tree_equal(lane(out_p, j), lane(base, i))
+
+
+def test_no_recompiles_across_rounds_and_repeat_runs(ctx):
+    sim, st, runner, pb = ctx
+    runner.run_rounds(st, pb, UNTILS, schedule=_small_rounds())  # warmup
+    t0 = runner.trace_count
+    out = runner.run_rounds(st, pb, UNTILS, schedule=_small_rounds())
+    assert runner.last_rounds["rounds"] > 2
+    assert runner.trace_count == t0, (
+        f"{runner.trace_count - t0} retraces after ladder warmup")
+    assert float(lane(out, 3).time) > 0.0
+
+
+def test_zero_horizon_lanes_freeze_on_entry(ctx):
+    """The chunk-padding contract: until=0 + max_epochs=0 lanes come back
+    bit-identical to their initial state (zero epochs executed)."""
+    sim, st, runner, pb = ctx
+    u = UNTILS.copy()
+    m = np.full(B, 2_000_000, np.int32)
+    u[2] = 0.0
+    m[2] = 0
+    sb = stack_states(st, B)
+    keep = sim.copy_state(sb)
+    out = runner.run_batch(sb, pb, u, m)
+    frozen = lane(out, 2)
+    assert int(frozen.stats.epochs) == 0
+    assert float(frozen.time) == 0.0
+    _assert_tree_equal(frozen, lane(keep, 2))
+    # live lanes were unaffected by the frozen sibling
+    assert float(lane(out, 3).time) > 0.0
+
+
+def test_run_chunked_per_lane_until_and_padded_tail(ctx):
+    """Chunked execution (padded tail included) must equal the one-shot
+    batch at the same per-lane horizons; padding rides the zero-horizon
+    path instead of re-simulating the tail point."""
+    sim, st, runner, pb = ctx
+    whole = runner.run_batch(stack_states(st, B), pb, UNTILS)
+    split = runner.run_chunked(st, pb, UNTILS, chunk=4)   # 4 + 2(+2 pad)
+    _assert_tree_equal(whole, split)
+
+
+# ---------------------------------------------------------------------------
+PATTERNS = ["compute", "stream", "pointer", "idle_half", "mixed"]
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_rounds_bit_identical_all_patterns(pattern):
+    """The pinned-workload sweep: rounds == full batch on every memsys
+    pattern, at mixed per-lane horizons, through real compaction."""
+    sim, st = build(n_cores=3, pattern=pattern, n_reqs=6, donate=True)
+    runner = BatchRunner(sim)
+    pts = [{"conn_latency[-1]": float(v)} for v in (10, 25, 40, 15)]
+    pb = build_param_batch(sim, pts)
+    u = np.asarray([150.0, 1200.0, 600.0, 300.0], np.float32)
+    full = runner.run_batch(stack_states(st, 4), pb, u)
+    rounds = runner.run_rounds(
+        st, pb, u, schedule=ChunkSchedule(make_ladder(4, top=2),
+                                          quantum=24))
+    _assert_tree_equal(full, rounds)
+
+
+def test_family_masked_rounds_bit_identical_mixed_horizons():
+    """Masked topology-family lanes (different sub-shapes) compose with
+    per-lane horizons: rounds == full batch, bit for bit."""
+    fam = build_family(n_cores=4, pattern="mixed", n_reqs=8, donate=True)
+    shapes = [{"core": c} for c in (1, 2, 3, 4, 2, 3)]
+    untils = np.asarray([300.0, 900.0, 150.0, 1200.0, 600.0, 75.0],
+                        np.float32)
+    pb = stack_params([fam.params_for(s) for s in shapes])
+    states = [fam.state_for(s) for s in shapes]
+    runner = BatchRunner(fam.sim)
+    full = runner.run_batch(stack_state_list(states), pb, untils)
+    rounds = runner.run_rounds(states, pb, untils,
+                               schedule=ChunkSchedule(make_ladder(6, top=2),
+                                                      quantum=24))
+    assert runner.last_rounds["rounds"] > 2
+    _assert_tree_equal(full, rounds)
+
+
+def test_run_sweep_per_point_horizons():
+    """run_sweep accepts a per-point ``until`` sequence and feeds each
+    lane its own horizon through the round loop."""
+    spec_points = [{"conn_latency[-1]": 10.0}, {"conn_latency[-1]": 10.0},
+                   {"conn_latency[-1]": 30.0}]
+    spec = SweepSpec.explicit(spec_points)
+    untils = [150.0, 600.0, 600.0]
+    rows = run_sweep(lambda: build(n_cores=3, pattern="mixed", n_reqs=6,
+                                   donate=True),
+                     spec, until=untils)
+    # same config, shorter horizon => no-later virtual time, fewer epochs
+    assert rows[0]["virtual_time"] <= rows[1]["virtual_time"]
+    assert rows[0]["epochs"] < rows[1]["epochs"]
+    assert rows[0]["virtual_time"] <= 150.0 + 1.0
+
+
+def test_make_ladder_clamps_degenerate_tops():
+    from repro.dse import make_ladder
+    assert make_ladder(16, top=0) == (1,)       # must not hang
+    assert make_ladder(16, top=-3) == (1,)
+    assert make_ladder(5) == (5,)
+    assert make_ladder(256) == (256, 128, 64, 32, 16, 8)
+    assert make_ladder(16, top=8, min_rung=4) == (8, 4)
+
+
+def test_runner_for_is_shared_per_sim():
+    from repro.dse import runner_for
+    sim, _ = build(n_cores=2, pattern="mixed", n_reqs=4, donate=True)
+    assert runner_for(sim) is runner_for(sim)   # repeat sweeps reuse it
+    sim2, _ = build(n_cores=2, pattern="mixed", n_reqs=4, donate=True)
+    assert runner_for(sim2) is not runner_for(sim)
+
+
+def test_consumed_template_raises_clear_error_in_rounds():
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4, donate=True)
+    sim.run(st, 500.0)                          # consumes st
+    runner = BatchRunner(sim)
+    pb = build_param_batch(sim, [{}, {}])
+    with pytest.raises(RuntimeError, match="copy_state"):
+        runner.run_rounds(st, pb, 500.0)
+
+
+def test_autotuned_rounds_match_full_batch():
+    """The autotune probe rounds are real sweep work: results with
+    autotune on are still bit-identical, the winning rung is cached for
+    later ``schedule=None`` runs, and a repeat sweep (which re-probes,
+    since the explicit schedule asks for it) retraces nothing."""
+    sim, st = build(n_cores=3, pattern="mixed", n_reqs=6, donate=True)
+    runner = BatchRunner(sim)
+    B2 = 16
+    pts = [{"conn_latency[-1]": 10.0 + 2.0 * i} for i in range(B2)]
+    pb = build_param_batch(sim, pts)
+    u = np.asarray([100.0 * (1 + (i % 8)) for i in range(B2)], np.float32)
+    full = runner.run_batch(stack_states(st, B2), pb, u)
+    sched = ChunkSchedule(make_ladder(B2, top=8, min_rung=4), quantum=16,
+                          autotune=True, probe_rungs=2)
+    tuned = runner.run_rounds(st, pb, u, schedule=sched)
+    _assert_tree_equal(full, tuned)
+    assert runner._tuned_top  # winner cached for later schedule=None runs
+    t0 = runner.trace_count
+    again = runner.run_rounds(st, pb, u, schedule=sched)
+    assert runner.trace_count == t0
+    _assert_tree_equal(full, again)

@@ -57,6 +57,19 @@ def test_batched_full_run_hlo_is_scatter_free():
     assert not _scatters(hlo), _scatters(hlo)
 
 
+def test_per_lane_horizon_full_run_hlo_is_scatter_free():
+    # the straggler-free round loop vmaps until/max_epochs per lane; the
+    # per-lane liveness must act through the loop condition and carry
+    # selects only — never turn into scatters
+    sim, sb, pb = _memsys_batch()
+    u = jnp.asarray([100.0, 200.0, 400.0, 800.0], jnp.float32)
+    m = jnp.asarray([100, 1000, 10000, 100000], jnp.int32)
+    fn = jax.jit(jax.vmap(
+        lambda s, p, u, m: sim._run(s, u, m, params=p)))
+    hlo = fn.lower(sb, pb, u, m).compile().as_text()
+    assert not _scatters(hlo), _scatters(hlo)
+
+
 def _family_batch():
     """A masked shape batch: lanes are different sub-shapes of one family
     (the structural-DSE hot path)."""
@@ -79,6 +92,18 @@ def test_masked_batched_full_run_hlo_is_scatter_free():
     fn = jax.jit(jax.vmap(
         lambda s, p: sim._run(s, 1000.0, 100000, params=p)))
     hlo = fn.lower(sb, pb).compile().as_text()
+    assert not _scatters(hlo), _scatters(hlo)
+
+
+def test_masked_per_lane_horizon_hlo_is_scatter_free():
+    # family activity masks + per-lane horizons compose (mixed sub-shapes
+    # at mixed horizons is the structural-DSE round-loop hot path)
+    sim, sb, pb = _family_batch()
+    u = jnp.asarray([100.0, 200.0, 400.0, 800.0], jnp.float32)
+    m = jnp.asarray([100, 1000, 10000, 100000], jnp.int32)
+    fn = jax.jit(jax.vmap(
+        lambda s, p, u, m: sim._run(s, u, m, params=p)))
+    hlo = fn.lower(sb, pb, u, m).compile().as_text()
     assert not _scatters(hlo), _scatters(hlo)
 
 
