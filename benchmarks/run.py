@@ -9,6 +9,9 @@
   (dse)      dse_throughput       batched-sweep configs/sec (DSE.md)
   (dse)      struct_sweep         topology-family shape sweep vs per-shape
                                   rebuild+recompile (DSE.md families)
+  (dse)      search_convergence   successive-halving search vs exhaustive
+                                  sweep: objective gap + cycle budget
+                                  (DSE.md "Search")
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the assigned
 architectures come from the dry-run (see launch/dryrun.py + EXPERIMENTS.md);
@@ -32,8 +35,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (dse_throughput, kernels, onira_cpi, parallel_sim,
-                   pdes_scaling, smart_ticking, struct_sweep,
-                   tracing_overhead, triosim_validation)
+                   pdes_scaling, search_convergence, smart_ticking,
+                   struct_sweep, tracing_overhead, triosim_validation)
     modules = {
         "smart_ticking": smart_ticking,
         "parallel_sim": parallel_sim,
@@ -44,6 +47,7 @@ def main() -> None:
         "pdes_scaling": pdes_scaling,
         "dse_throughput": dse_throughput,
         "struct_sweep": struct_sweep,
+        "search_convergence": search_convergence,
     }
     if args.only:
         modules = {k: v for k, v in modules.items() if k in args.only}

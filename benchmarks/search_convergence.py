@@ -1,0 +1,175 @@
+"""Search convergence vs the exhaustive sweep it replaces (DSE.md
+"Search").
+
+The memsys 3-axis grid (8 crossbar latencies x 6 L1 hit-rate boosts x 4
+DRAM periods = 192 design points) is swept exhaustively at the full
+horizon, then searched with seeded ``SuccessiveHalving`` over the same
+grid — budgets accounted in *simulated cycles* (what a simulation
+campaign actually pays; wall-clock on this drifty box is reported but
+not gated).  The objective is the estimated completion time
+``est_finish = virtual_time * total_reqs / reqs_done`` — equal to the
+true completion time once a config drains, and a throughput-based
+estimate mid-flight, so short-horizon rungs rank configs meaningfully.
+
+Acceptance (CI-gated via BENCH_search.json):
+
+* ``gap_pct <= 2`` — the search's best config is within 2% of the
+  exhaustive optimum objective;
+* ``budget_fraction <= 0.40`` — for at most 40% of the exhaustive
+  simulated-cycle budget;
+* ``resume_identical`` — a ``SearchState`` snapshot taken mid-search
+  resumes the bit-identical trajectory (same trials, same budget).
+
+The sequential baselines are quoted exactly as in BENCH_dse.json: the
+pre-SimParams rebuild+recompile-per-point workflow and the shared-jit
+sequential workflow, measured on small samples adjacent to the gated
+measurement (a rate suffices; this box's absolute throughput drifts
+~2x between runs).
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.dse import (SearchState, SuccessiveHalving, SweepSpec,
+                       apply_point, memoize_build, run_search, run_sweep)
+from repro.sims.memsys import build
+
+AXES = {
+    "conn_latency[-1]": [10.0, 20.0, 30.0, 40.0, 55.0, 70.0, 85.0, 100.0],
+    "kind.l1.extra_hit_rate": [0.0, 0.15, 0.3, 0.45, 0.6, 0.8],
+    "period.dram": [1.0, 2.0, 3.0, 4.0],
+}
+N_CORES, N_REQS = 8, 24
+MAX_H = 5600.0          # ~1.1x the slowest config's drain time
+ETA = 3
+MIN_H = MAX_H / ETA**3  # 4 rungs: 192 -> 64 -> 22 -> 8 survivors
+REBUILD_SAMPLE = 3
+SHAREDJIT_SAMPLE = 12
+RESUME_AFTER_ROUND = 2  # snapshot boundary for the mid-search resume
+
+
+def _sh(pool, state=None):
+    return SuccessiveHalving(pool, "est_finish", max_horizon=MAX_H,
+                             min_horizon=MIN_H, eta=ETA, seed=0,
+                             state=state)
+
+
+def bench():
+    rows = []
+
+    def build_fn():
+        # super-epoch fusion is observation-invariant (ENGINE_PERF.md)
+        # and ~30% faster wall on this grid — results are bit-identical
+        return build(n_cores=N_CORES, pattern="mixed", n_reqs=N_REQS,
+                     donate=True, super_epoch=4)
+
+    bf = memoize_build(build_fn)
+    sim, st = bf()
+    total = int(np.sum(np.asarray(st.comp_state["core"]["remaining"])))
+
+    def extract(sim, s):
+        rem = int(np.sum(np.asarray(s.comp_state["core"]["remaining"])))
+        vt = float(s.time)
+        done = total - rem
+        return {"virtual_time": vt, "remaining": rem,
+                "est_finish": vt * total / max(done, 1)}
+
+    pool = SweepSpec.grid(AXES)
+    n = len(pool)
+
+    # exhaustive sweep at the full horizon: the optimum + cycle budget
+    # the search is judged against (also compiles/warms the shared
+    # runner the search rounds reuse)
+    t0 = time.perf_counter()
+    full = run_sweep(bf, pool, until=MAX_H, extract=extract)
+    dt_full = time.perf_counter() - t0
+    assert all(r["remaining"] == 0 for r in full), "raise MAX_H"
+    opt = min(r["est_finish"] for r in full)
+    exhaustive_budget = sum(r["virtual_time"] for r in full)
+    rows.append({
+        "name": "search_convergence/exhaustive",
+        "us_per_call": dt_full / n * 1e6,
+        "derived": f"{n}-point grid optimum {opt:.0f} cycles for "
+                   f"{exhaustive_budget:.0f} simulated cycles "
+                   f"({n / dt_full:.1f} configs/s)",
+        "optimum": opt,
+        "budget_cycles": exhaustive_budget,
+        "configs_per_sec": n / dt_full,
+    })
+
+    # sequential baselines, quoted as in BENCH_dse.json ----------------
+    t0 = time.perf_counter()
+    for i in range(REBUILD_SAMPLE):
+        s_i, st_i = build(n_cores=N_CORES, pattern="mixed", n_reqs=N_REQS,
+                          dram_latency=10.0 + 10.0 * i, donate=True)
+        out = s_i.run(st_i, MAX_H)
+        out.time.block_until_ready()
+    dt = time.perf_counter() - t0
+    rebuild_cps = REBUILD_SAMPLE / dt
+    rows.append({
+        "name": "search_convergence/sequential_rebuild",
+        "us_per_call": dt / REBUILD_SAMPLE * 1e6,
+        "derived": f"{rebuild_cps:.2f} configs/s (build+compile+run per "
+                   f"point, {REBUILD_SAMPLE}-point sample; exhaustive "
+                   f"grid at this rate: {n / rebuild_cps:.0f}s)",
+        "configs_per_sec": rebuild_cps,
+    })
+
+    sub = list(pool)[::n // SHAREDJIT_SAMPLE][:SHAREDJIT_SAMPLE]
+    base = sim.default_params()
+    sub_params = [apply_point(base, p) for p in sub]
+    warm = sim.run(sim.copy_state(st), MAX_H, params=sub_params[0])
+    warm.time.block_until_ready()
+    states = [jax.block_until_ready(sim.copy_state(st)) for _ in sub]
+    t0 = time.perf_counter()
+    outs = [sim.run(s, MAX_H, params=p) for s, p in zip(states, sub_params)]
+    jax.block_until_ready(outs[-1].time)
+    dt = time.perf_counter() - t0
+    shared_cps = len(sub) / dt
+    rows.append({
+        "name": "search_convergence/sequential_sharedjit",
+        "us_per_call": dt / len(sub) * 1e6,
+        "derived": f"{shared_cps:.1f} configs/s (one compile, sequential "
+                   f"runs, {len(sub)}-point sample)",
+        "configs_per_sec": shared_cps,
+    })
+
+    # the search: seeded successive halving over the same grid ---------
+    snaps = []
+    t0 = time.perf_counter()
+    res = run_search(bf, _sh(pool), extract=extract,
+                     callback=lambda d: snaps.append(d.state.to_json()))
+    dt_sh = time.perf_counter() - t0
+    gap_pct = (res.best["est_finish"] / opt - 1.0) * 100.0
+    frac = res.budget / exhaustive_budget
+
+    # mid-search resume: restore the round-boundary snapshot and replay
+    # the remaining rounds — the trajectory must be bit-identical
+    state = SearchState.from_json(snaps[RESUME_AFTER_ROUND - 1])
+    resumed = run_search(bf, _sh(pool, state=state), extract=extract)
+    resume_identical = (resumed.rows == res.rows
+                        and resumed.budget == res.budget
+                        and resumed.best == res.best)
+
+    rows.append({
+        "name": "search_convergence/successive_halving",
+        "us_per_call": dt_sh / max(len(res.rows), 1) * 1e6,
+        "derived": f"best {res.best['est_finish']:.0f} cycles "
+                   f"(gap {gap_pct:.2f}%) for {res.budget:.0f} simulated "
+                   f"cycles = {frac * 100:.1f}% of exhaustive, "
+                   f"{len(res.rows)} trials / {res.rounds} rounds, "
+                   f"resume_identical={resume_identical} "
+                   f"[acceptance: gap<=2%, budget<=40%, resume]",
+        "best_objective": res.best["est_finish"],
+        "optimum": opt,
+        "gap_pct": gap_pct,
+        "budget_cycles": res.budget,
+        "budget_fraction": frac,
+        "trials": len(res.rows),
+        "rounds": res.rounds,
+        "resume_identical": bool(resume_identical),
+        "wall_s": dt_sh,
+        "wall_s_exhaustive": dt_full,
+    })
+    return rows

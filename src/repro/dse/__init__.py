@@ -21,8 +21,12 @@ sweep subsystem:
     groups;
   * :mod:`~repro.dse.schedule` — the chunk ladder, epoch-quantum policy
     and the one-shot chunk-size autotuner behind ``run_rounds``;
-  * :mod:`~repro.dse.report` — tidy rows, Pareto-front extraction and
-    JSON/CSV export.
+  * :mod:`~repro.dse.report` — tidy rows, ``dominates`` /
+    Pareto-front extraction and JSON/CSV export;
+  * :mod:`~repro.dse.search` — closed-loop search drivers
+    (``SuccessiveHalving``, ``BatchBO``, ``RandomSearch``) that pick
+    points + horizons between rounds under a simulated-cycle budget,
+    with resumable JSON-serializable ``SearchState``.
 
 A singleton batch is bit-identical to the unbatched engine, and a
 masked family lane is bit-identical on active rows to an unpadded build
@@ -30,11 +34,16 @@ of its shape — the invariants that make sweep results trustworthy
 (tests/dse).
 """
 from .family import TopologyFamily
-from .report import format_table, pareto_front, tidy, to_csv, to_json
+from .report import (dominates, format_table, pareto_front, score_vector,
+                     tidy, to_csv, to_json)
 from .runner import (BatchRunner, default_extract, extract_rows, lane,
-                     run_sweep, runner_for, stack_state_list, stack_states)
+                     memoize_build, run_sweep, runner_for,
+                     stack_state_list, stack_states)
 from .schedule import ChunkAutotuner, ChunkSchedule, auto_schedule, \
     make_ladder
+from .search import (BatchBO, Objective, RandomSearch, SearchDriver,
+                     SearchResult, SearchState, SuccessiveHalving,
+                     horizon_ladder, run_search)
 from .sweep import (SweepSpec, apply_point, axis_error, build_param_batch,
                     split_shape, stack_params, valid_axes)
 
@@ -42,7 +51,11 @@ __all__ = [
     "SweepSpec", "apply_point", "axis_error", "valid_axes",
     "build_param_batch", "stack_params", "split_shape", "TopologyFamily",
     "BatchRunner", "run_sweep", "stack_states", "stack_state_list", "lane",
-    "default_extract", "extract_rows", "runner_for",
+    "default_extract", "extract_rows", "runner_for", "memoize_build",
     "ChunkSchedule", "ChunkAutotuner", "auto_schedule", "make_ladder",
-    "pareto_front", "tidy", "to_csv", "to_json", "format_table",
+    "SearchDriver", "SearchState", "SearchResult", "Objective",
+    "run_search", "SuccessiveHalving", "horizon_ladder", "BatchBO",
+    "RandomSearch",
+    "pareto_front", "dominates", "score_vector", "tidy", "to_csv",
+    "to_json", "format_table",
 ]

@@ -32,6 +32,31 @@ def tidy(rows: Iterable[Mapping]) -> list[dict]:
     return [{k: _as_scalar(r.get(k)) for k in keys} for r in rows]
 
 
+def score_vector(row: Mapping, objectives: Mapping[str, str]) -> tuple:
+    """Canonical "higher is better" objective vector of one row."""
+    return tuple((1.0 if d == MAX else -1.0) * float(row[c])
+                 for c, d in objectives.items())
+
+
+def _dominates_scores(a: tuple, b: tuple) -> bool:
+    """``a`` dominates ``b`` on canonical higher-is-better vectors."""
+    return (all(x >= y for x, y in zip(a, b))
+            and any(x > y for x, y in zip(a, b)))
+
+
+def dominates(a: Mapping, b: Mapping,
+              objectives: Mapping[str, str]) -> bool:
+    """Whether row ``a`` dominates row ``b`` under ``objectives``
+    ({column: 'min'|'max'}): at least as good on every objective and
+    strictly better on one.  NaN objectives dominate nothing and are
+    dominated by nothing (NaN compares false), matching
+    :func:`pareto_front`'s exclusion rule.  Shared by the front
+    extraction below and the search promoters
+    (:mod:`repro.dse.search`)."""
+    return _dominates_scores(score_vector(a, objectives),
+                             score_vector(b, objectives))
+
+
 def pareto_front(rows: Sequence[Mapping],
                  objectives: Mapping[str, str]) -> list[dict]:
     """Non-dominated rows under ``objectives`` ({column: 'min'|'max'}).
@@ -43,26 +68,34 @@ def pareto_front(rows: Sequence[Mapping],
     so they could neither dominate nor be dominated and would otherwise
     pollute every front (a NaN metric usually means the config never
     finished; it is not a trade-off point).
+
+    Sort-based fast path: candidates are visited in descending
+    lexicographic score order, in which a dominator always precedes
+    everything it dominates — so each candidate is checked against the
+    current front only (O(n·|front| + n log n), not all-pairs O(n²)).
     """
     assert objectives and all(d in (MIN, MAX) for d in objectives.values())
 
-    def score(r):
-        # canonical "higher is better" vector
-        return tuple((1.0 if d == MAX else -1.0) * float(r[c])
-                     for c, d in objectives.items())
-
     scored = [(s, i) for i, r in enumerate(rows)
-              for s in [score(r)] if not any(v != v for v in s)]
-    front = []
-    for s, i in scored:
-        dominated = any(
-            all(o >= v for o, v in zip(os, s))
-            and any(o > v for o, v in zip(os, s))
-            for os, j in scored if j != i)
-        duplicate = any(os == s for os, j in front)
-        if not dominated and not duplicate:
-            front.append((s, i))
-    return [dict(rows[i]) for _, i in front]
+              for s in [score_vector(r, objectives)]
+              if not any(v != v for v in s)]
+    # descending lex by score; ties resolved to input order so the first
+    # occurrence of a duplicate vector is the one visited (and kept)
+    order = sorted(range(len(scored)),
+                   key=lambda k: (tuple(-v for v in scored[k][0]),
+                                  scored[k][1]))
+    front_scores: list[tuple] = []
+    front_idx: list[int] = []
+    seen: set[tuple] = set()
+    for k in order:
+        s, i = scored[k]
+        if s in seen:
+            continue
+        if not any(_dominates_scores(fs, s) for fs in front_scores):
+            front_scores.append(s)
+            front_idx.append(i)
+            seen.add(s)
+    return [dict(rows[i]) for i in sorted(front_idx)]
 
 
 def to_json(rows: Iterable[Mapping], path: str) -> None:

@@ -38,6 +38,7 @@ Execution strategies, cheapest lane-waste first:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import inspect
 import time
 import weakref
@@ -488,6 +489,58 @@ def runner_for(sim) -> BatchRunner:
     if r is None:
         r = _RUNNERS[sim] = BatchRunner(sim)
     return r
+
+
+def memoize_build(build_fn: Callable) -> Callable:
+    """Memoize a sweep build function across calls, so incremental point
+    submission (search rounds, repeated sweeps) reuses one built
+    simulation — and therefore :func:`runner_for`'s compiled rungs and
+    autotuned chunk — instead of rebuilding and recompiling per round.
+
+    * Plain groups: the ``(sim, state)`` of each distinct ``static.*``
+      kwarg combination is cached and returned as-is (``run_sweep``
+      copies the template state per lane, so it is never consumed).
+    * Topology families (``shape=`` calls): the cached family is reused
+      whenever its ``shape_max`` covers the requested shape — a search
+      round asking for a *smaller* maximum (survivors shrank) runs as
+      masked lanes of the already-compiled family.  A request that
+      exceeds the cache is rebuilt at the elementwise maximum of old and
+      new, so repeated growth converges to one family per group.
+
+    The wrapper forwards ``build_fn``'s signature (``functools.wraps``),
+    so ``run_sweep``'s eager ``static.*`` kwarg validation still sees
+    the real keyword names.  Idempotent to re-wrap; keep the wrapper
+    itself alive to keep the cache (and the weak-keyed runners) alive.
+    """
+    if getattr(build_fn, "_dse_memoized", False):
+        return build_fn
+    cache: dict[tuple, object] = {}
+
+    @functools.wraps(build_fn)
+    def wrapped(*args, **kw):
+        shape = kw.pop("shape", None)
+        # family and plain builds of the same static kwargs return
+        # different objects — keep them in disjoint cache slots
+        key = (shape is not None, args, tuple(sorted(kw.items())))
+        if shape is None:
+            if key not in cache:
+                cache[key] = build_fn(*args, **kw)
+            return cache[key]
+        fam = cache.get(key)
+        if fam is not None and all(
+                fam.shape_max.get(a, 0) >= int(v)
+                for a, v in shape.items()):
+            return fam
+        grown = dict(shape)
+        if fam is not None:
+            for a, v in fam.shape_max.items():
+                grown[a] = max(int(grown.get(a, 0)), int(v))
+        fam = build_fn(*args, **kw, shape=grown)
+        cache[key] = fam
+        return fam
+
+    wrapped._dse_memoized = True
+    return wrapped
 
 
 def _static_kwarg_names(build_fn) -> list[str] | None:

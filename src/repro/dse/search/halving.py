@@ -1,0 +1,135 @@
+"""Successive halving over round-based sweeps (ASHA-style).
+
+Run the whole candidate pool at a short horizon, promote the top
+``1/eta`` fraction to an ``eta``-times longer horizon, repeat until the
+survivors reach the full horizon — the classic successive-halving
+schedule (Jamieson & Talwalkar; ASHA), with the *horizon ladder* as the
+fidelity axis: a rung-``r`` trial runs ``max_horizon / eta**(R-1-r)``
+simulated cycles.  This is exactly the workload PR 4's per-lane ``until``
+was built for: every rung is one mixed- or uniform-horizon
+``run_sweep`` round, so promotion costs no recompiles and stragglers
+cost no waste.
+
+The horizon ladder is the *search* analogue of the runner's chunk
+ladder (DSE.md): the chunk ladder schedules **wall-clock** (which lanes
+share an executable in a round, result-invariant), the horizon ladder
+schedules **simulated-cycle budget** (how long each config deserves to
+run, the thing the search economizes).
+
+``brackets > 1`` staggers Hyperband-style brackets: the pool is split
+round-robin, bracket ``b`` starts ``b`` rungs up the ladder (fewer
+configs, longer horizons), and every round asks all live brackets at
+once — a genuinely mixed-horizon batch through one vmapped sweep.
+
+Promotion ranks rows with :meth:`Objective.order` — single objectives
+stably sort the scalarized column; multi-objective pools promote
+non-dominated rows first (via :func:`~repro.dse.report.dominates`).
+Rows are bit-reproducible and the sort is stable, so a seeded search's
+trajectory is bit-reproducible and resumable (``state=``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+from ..sweep import SweepSpec
+from .driver import Objective, SearchDriver, SearchState
+
+
+def horizon_ladder(max_horizon: float, min_horizon: float | None = None,
+                   eta: int = 3, rungs: int | None = None) -> list[float]:
+    """Geometric rung horizons ending exactly at ``max_horizon``.
+
+    Either name the bottom (``min_horizon`` — the count of rungs is the
+    largest R with ``max/eta**(R-1) >= min_horizon``) or the count
+    (``rungs``).  Returns ``[max/eta**(R-1), ..., max/eta, max]``.
+    """
+    assert eta >= 2 and max_horizon > 0
+    if rungs is None:
+        if min_horizon is None:
+            rungs = 1
+        else:
+            assert 0 < min_horizon <= max_horizon
+            rungs = 1 + int(math.floor(
+                math.log(max_horizon / min_horizon) / math.log(eta) + 1e-9))
+    assert rungs >= 1
+    return [max_horizon / eta ** (rungs - 1 - r) for r in range(rungs)]
+
+
+class SuccessiveHalving(SearchDriver):
+    """ASHA-style successive halving driving mixed-horizon sweep rounds.
+
+    ``pool`` is the candidate set: a :class:`SweepSpec`, a sequence of
+    point dicts, or an axes dict (as :meth:`SweepSpec.random` takes)
+    sampled to ``n_init`` points with ``seed``.  Points may use any
+    sweep axis — including ``shape.*`` family axes, so the search picks
+    topology shapes as freely as latencies.
+
+    The horizon ladder comes from ``max_horizon`` + (``min_horizon`` or
+    ``rungs``) + ``eta`` (:func:`horizon_ladder`); each promotion keeps
+    the top ``ceil(n / eta)`` of a rung.  ``brackets`` staggers
+    Hyperband-style brackets (see module docstring).  ``cycle_budget``
+    optionally hard-caps the simulated-cycle spend.
+    """
+
+    def __init__(self, pool, objective: str | Mapping | Objective, *,
+                 max_horizon: float, min_horizon: float | None = None,
+                 rungs: int | None = None, eta: int = 3,
+                 n_init: int | None = None, brackets: int = 1,
+                 seed: int = 0, cycle_budget: float | None = None,
+                 state: SearchState | None = None):
+        super().__init__(objective, seed=seed, cycle_budget=cycle_budget,
+                         state=state)
+        if isinstance(pool, dict):
+            assert n_init, "an axes-dict pool needs n_init"
+            pool = SweepSpec.random(pool, n_init, seed=seed)
+        points = [dict(p) for p in pool]
+        assert points, "empty candidate pool"
+        self.eta = int(eta)
+        self.horizons = horizon_ladder(max_horizon, min_horizon, self.eta,
+                                       rungs)
+        n_brackets = max(1, min(int(brackets), len(self.horizons),
+                                len(points)))
+        if not self.state.driver:        # fresh search (not a resume)
+            self.state.driver = {"brackets": [
+                {"rung": b, "alive": points[b::n_brackets]}
+                for b in range(n_brackets)]}
+
+    # ------------------------------------------------------------------
+    @property
+    def max_horizon(self) -> float:
+        return self.horizons[-1]
+
+    def _live_brackets(self) -> list[dict]:
+        return [br for br in self.state.driver["brackets"]
+                if br["alive"] and br["rung"] < len(self.horizons)]
+
+    def _done(self) -> bool:
+        return not self._live_brackets()
+
+    def _ask(self):
+        points, horizons = [], []
+        segments = []
+        for br in self._live_brackets():
+            u = self.horizons[br["rung"]]
+            points += [dict(p) for p in br["alive"]]
+            horizons += [u] * len(br["alive"])
+            segments.append((br, len(br["alive"])))
+        self._segments = segments
+        return points, horizons
+
+    def _tell(self, points, horizons, rows) -> None:
+        lo = 0
+        for br, n in self._segments:
+            seg = list(rows[lo:lo + n])
+            seg_points = [dict(p) for p in points[lo:lo + n]]
+            lo += n
+            last_rung = br["rung"] >= len(self.horizons) - 1
+            if last_rung:
+                br["alive"] = []         # final rung: recorded, retired
+            else:
+                keep = max(1, math.ceil(n / self.eta))
+                order = self.objective.order(seg)
+                br["alive"] = [seg_points[i] for i in order[:keep]]
+            br["rung"] += 1
+        self._segments = None

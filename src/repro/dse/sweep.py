@@ -38,6 +38,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import re
+import zlib
 from typing import Any, Iterable, Sequence
 
 import jax
@@ -81,26 +82,35 @@ class SweepSpec:
     def random(axes: dict[str, Any], n: int, seed: int = 0,
                validate_for=None) -> "SweepSpec":
         """``n`` points sampled independently per axis.  Axis specs:
-        ``(lo, hi)`` uniform float, ``(lo, hi, 'log')`` log-uniform, or a
-        list/tuple of >2 (or non-numeric) entries = uniform choice."""
-        rng = np.random.default_rng(seed)
+        ``(lo, hi)`` uniform — float endpoints sample uniform floats,
+        int endpoints sample uniform ints on the *inclusive* range —
+        ``(lo, hi, 'log')`` log-uniform float, or a list/tuple of >2 (or
+        non-numeric) entries = uniform choice.
+
+        Each axis draws from its own RNG substream keyed on
+        ``(seed, axis name)``: the values one axis yields under a seed
+        never depend on the other axes' spec styles, their count, or
+        dict order, and int axes come back as Python ints (JSON-clean
+        rows; pinned by ``tests/dse/test_sweep_spec.py``).
+        """
         cols = {}
         for name, spec in axes.items():
-            spec = tuple(spec)
-            is_range = (len(spec) in (2, 3)
-                        and all(isinstance(v, (int, float))
-                                for v in spec[:2])
-                        and (len(spec) == 2 or spec[2] == "log"))
-            if is_range:
-                lo, hi = float(spec[0]), float(spec[1])
-                if len(spec) == 3:
-                    cols[name] = list(np.exp(rng.uniform(
-                        np.log(lo), np.log(hi), n)))
-                else:
-                    cols[name] = list(rng.uniform(lo, hi, n))
+            rng = np.random.default_rng([seed, zlib.crc32(name.encode())])
+            kind, *args = parse_axis_spec(spec)
+            if kind == "log":
+                lo, hi = args
+                cols[name] = [float(v) for v in np.exp(rng.uniform(
+                    np.log(lo), np.log(hi), n))]
+            elif kind == "int":
+                lo, hi = args
+                cols[name] = [int(v) for v in rng.integers(lo, hi + 1, n)]
+            elif kind == "float":
+                lo, hi = args
+                cols[name] = [float(v) for v in rng.uniform(lo, hi, n)]
             else:
-                cols[name] = [spec[int(i)]
-                              for i in rng.integers(0, len(spec), n)]
+                values = args[0]
+                cols[name] = [_py_scalar(values[int(i)])
+                              for i in rng.integers(0, len(values), n)]
         out = SweepSpec(tuple(
             {name: cols[name][i] for name in axes} for i in range(n)))
         if validate_for is not None:
@@ -108,8 +118,37 @@ class SweepSpec:
         return out
 
     @staticmethod
-    def explicit(points: Iterable[dict], validate_for=None) -> "SweepSpec":
-        spec = SweepSpec(tuple(dict(p) for p in points))
+    def explicit(points: Iterable[dict], validate_for=None,
+                 ragged: bool = False) -> "SweepSpec":
+        """An ordered spec from caller-supplied point dicts.
+
+        Points that share a ``static.*`` assignment stack into one
+        vmapped compile group, so they must assign the same axis keys —
+        a missing or extra key would otherwise surface much later as an
+        opaque stacking/lookup failure deep in a sweep or search round.
+        The mismatch raises here instead, naming the offending point
+        index and keys.  Points in *different* static groups may use
+        different traced axes (each group stacks separately).
+        ``ragged=True`` skips the check entirely.
+        """
+        pts = tuple(dict(p) for p in points)
+        if not ragged:
+            groups: dict[frozenset, tuple[int, set]] = {}
+            for i, p in enumerate(pts):
+                static = frozenset(kv for kv in p.items()
+                                   if kv[0].startswith(STATIC_PREFIX))
+                j, keys0 = groups.setdefault(static, (i, set(p)))
+                if set(p) != keys0:
+                    missing = sorted(keys0 - set(p))
+                    extra = sorted(set(p) - keys0)
+                    raise ValueError(
+                        f"explicit point {i} has inconsistent axis keys "
+                        f"(missing {missing}, extra {extra} vs point "
+                        f"{j}'s {sorted(keys0)}, the first point of its "
+                        "static group); points that stack into one "
+                        "compile group must assign identical axes "
+                        "(ragged=True skips this check)")
+        spec = SweepSpec(pts)
         if validate_for is not None:
             spec.validate(validate_for)
         return spec
@@ -195,6 +234,36 @@ class SweepSpec:
 
 
 # ---------------------------------------------------------------------------
+def _py_scalar(v):
+    """Numpy scalar -> plain Python scalar (rows stay JSON-clean)."""
+    return v.item() if isinstance(v, np.generic) else v
+
+
+def parse_axis_spec(spec) -> tuple:
+    """Classify one :meth:`SweepSpec.random` axis spec — the single
+    source of truth for spec detection, shared with the BO surrogate's
+    axis encoders (``repro.dse.search.bo``) so sampling and encoding can
+    never drift apart.
+
+    Returns ``("log", lo, hi)``, ``("int", lo, hi)`` (both endpoints
+    Python ints — the *inclusive* integer range), ``("float", lo, hi)``,
+    or ``("choice", values)``.
+    """
+    spec = tuple(spec)
+    is_range = (len(spec) in (2, 3)
+                and all(isinstance(v, (int, float))
+                        and not isinstance(v, bool)
+                        for v in spec[:2])
+                and (len(spec) == 2 or spec[2] == "log"))
+    if not is_range:
+        return ("choice", spec)
+    if len(spec) == 3:
+        return ("log", float(spec[0]), float(spec[1]))
+    if all(isinstance(v, int) for v in spec[:2]):
+        return ("int", int(spec[0]), int(spec[1]))
+    return ("float", float(spec[0]), float(spec[1]))
+
+
 def split_shape(point: dict) -> tuple[dict, dict]:
     """Split one design point into (shape assignment, traced assignments).
 

@@ -4,7 +4,8 @@ import json
 
 import pytest
 
-from repro.dse import format_table, pareto_front, tidy, to_csv, to_json
+from repro.dse import dominates, format_table, pareto_front, tidy, \
+    to_csv, to_json
 
 ROWS = [
     {"lat": 10.0, "hit": 0.0, "time": 500.0},
@@ -58,6 +59,60 @@ def test_pareto_front_excludes_nan_metrics():
     assert front == [rows[0], rows[3]]
     # all-NaN input: empty front rather than everything "non-dominated"
     assert pareto_front([{"a": nan}, {"a": nan}], {"a": "min"}) == []
+
+
+def test_dominates_respects_directions_and_nan():
+    obj = {"t": "min", "q": "max"}
+    assert dominates({"t": 1.0, "q": 5.0}, {"t": 2.0, "q": 5.0}, obj)
+    assert dominates({"t": 1.0, "q": 6.0}, {"t": 2.0, "q": 5.0}, obj)
+    assert not dominates({"t": 1.0, "q": 4.0}, {"t": 2.0, "q": 5.0}, obj)
+    assert not dominates({"t": 1.0, "q": 5.0}, {"t": 1.0, "q": 5.0}, obj)
+    nan = float("nan")
+    assert not dominates({"t": nan, "q": 9.0}, {"t": 2.0, "q": 5.0}, obj)
+    assert not dominates({"t": 1.0, "q": 9.0}, {"t": nan, "q": 5.0}, obj)
+
+
+def _naive_front(rows, objectives):
+    """The all-pairs O(n^2) reference the fast path must reproduce."""
+    def score(r):
+        return tuple((1.0 if d == "max" else -1.0) * float(r[c])
+                     for c, d in objectives.items())
+    scored = [(s, i) for i, r in enumerate(rows)
+              for s in [score(r)] if not any(v != v for v in s)]
+    front = []
+    for s, i in scored:
+        dominated = any(
+            all(o >= v for o, v in zip(os, s))
+            and any(o > v for o, v in zip(os, s))
+            for os, j in scored if j != i)
+        duplicate = any(os == s for os, j in front)
+        if not dominated and not duplicate:
+            front.append((s, i))
+    return [dict(rows[i]) for _, i in front]
+
+
+@pytest.mark.parametrize("objectives", [
+    {"a": "min", "b": "min"},
+    {"a": "min", "b": "max", "c": "min"},
+])
+def test_pareto_front_matches_naive_on_1k_rows(objectives):
+    """The sort-based fast path is front-identical to the all-pairs
+    implementation — same rows, same (input) order — on 1k rows with
+    plenty of ties, duplicates and a few NaNs."""
+    import numpy as np
+    rng = np.random.default_rng(42)
+    # few distinct values per column => heavy ties and exact duplicates
+    rows = [{"a": float(rng.integers(0, 12)),
+             "b": float(rng.integers(0, 12)),
+             "c": float(rng.integers(0, 12)),
+             "id": i} for i in range(1000)]
+    for i in (17, 400, 999):
+        rows[i]["a"] = float("nan")
+    fast = pareto_front(rows, objectives)
+    naive = _naive_front(rows, objectives)
+    assert fast == naive
+    ids = [r["id"] for r in fast]
+    assert ids == sorted(ids)               # input order preserved
 
 
 def test_tidy_unions_keys_and_coerces_scalars():

@@ -1,0 +1,411 @@
+"""Closed-loop search (`repro.dse.search`): driver contract, successive
+halving, batched BO, and the invariants that make search results
+trustworthy:
+
+* seeded searches are bit-reproducible, and a `SearchState` serialized
+  at any round boundary resumes the *identical* trajectory;
+* repeat searches through a memoized build function retrace nothing
+  (the tuned ladder and compiled rungs are reused across rounds);
+* successive halving finds the exhaustive optimum of a small grid for
+  less simulated-cycle budget than the exhaustive sweep;
+* `shape.*` family axes are first-class search axes (one family build
+  serves every round).
+"""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.dse import (BatchBO, Objective, RandomSearch, SearchState,
+                       SuccessiveHalving, SweepSpec, horizon_ladder,
+                       memoize_build, run_search, run_sweep, runner_for)
+from repro.sims.memsys import build, build_family
+
+MAX_H = 2000.0
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    """One memoized small memsys build shared by every search test (the
+    point of memoize_build is exactly this reuse)."""
+    built = []
+
+    def build_fn():
+        built.append(1)
+        return build(n_cores=3, pattern="mixed", n_reqs=6, donate=True)
+
+    bf = memoize_build(build_fn)
+    sim, st = bf()
+    total = int(np.sum(np.asarray(st.comp_state["core"]["remaining"])))
+
+    def extract(sim, s):
+        rem = int(np.sum(np.asarray(s.comp_state["core"]["remaining"])))
+        vt = float(s.time)
+        done = total - rem
+        return {"virtual_time": vt, "remaining": rem,
+                "est_finish": vt * total / max(done, 1)}
+
+    pool = SweepSpec.grid({"conn_latency[-1]": [10., 20., 30., 40.],
+                           "kind.l1.extra_hit_rate": [0.0, 0.4, 0.8]})
+    return bf, sim, extract, pool, built
+
+
+def _sh(pool, **kw):
+    args = dict(max_horizon=MAX_H, min_horizon=60.0, eta=3, seed=0)
+    args.update(kw)
+    return SuccessiveHalving(pool, "est_finish", **args)
+
+
+# ---------------------------------------------------------------------------
+def test_horizon_ladder_geometry():
+    assert horizon_ladder(2000.0, rungs=1) == [2000.0]
+    lad = horizon_ladder(2700.0, min_horizon=100.0, eta=3)
+    assert lad == [100.0, 300.0, 900.0, 2700.0]
+    assert horizon_ladder(2000.0, min_horizon=2000.0, eta=3) == [2000.0]
+    # rungs= names the count directly
+    assert horizon_ladder(800.0, rungs=3, eta=2) == [200.0, 400.0, 800.0]
+
+
+def test_successive_halving_finds_exhaustive_optimum_cheaper(ctx):
+    bf, sim, extract, pool, _ = ctx
+    res = run_search(bf, _sh(pool), extract=extract)
+    rows = run_sweep(bf, pool, until=MAX_H, extract=extract)
+    opt = min(r["est_finish"] for r in rows)
+    exhaustive_budget = sum(r["virtual_time"] for r in rows)
+    assert res.best["est_finish"] == opt          # found the true optimum
+    assert res.best["until"] == MAX_H             # ...at the full horizon
+    assert res.budget < exhaustive_budget         # ...for less spend
+    assert len(res.rows) < 3 * len(pool)          # and far fewer trials
+    # budget accounting matches the recorded trials exactly
+    assert res.budget == pytest.approx(
+        sum(t["virtual_time"] for t in res.rows))
+    # promotion shrinks rung populations by ~eta
+    per_round = {}
+    for t in res.rows:
+        per_round[t["round"]] = per_round.get(t["round"], 0) + 1
+    sizes = [per_round[r] for r in sorted(per_round)]
+    assert sizes[0] == len(pool) and sizes == sorted(sizes, reverse=True)
+    assert sizes[1] == math.ceil(sizes[0] / 3)
+
+
+def test_search_is_bit_reproducible_per_seed(ctx):
+    bf, sim, extract, pool, _ = ctx
+    r1 = run_search(bf, _sh(pool), extract=extract)
+    r2 = run_search(bf, _sh(pool), extract=extract)
+    assert r1.rows == r2.rows
+    assert r1.best == r2.best and r1.budget == r2.budget
+
+
+def test_search_state_resumes_identical_trajectory(ctx):
+    bf, sim, extract, pool, _ = ctx
+    snaps = []
+    full = run_search(bf, _sh(pool), extract=extract,
+                      callback=lambda d: snaps.append(d.state.to_json()))
+    assert len(snaps) == full.rounds
+    for k in range(len(snaps) - 1):       # resume from every boundary
+        state = SearchState.from_json(snaps[k])
+        assert state.round == k + 1
+        resumed = run_search(bf, _sh(pool, state=state), extract=extract)
+        assert resumed.rows == full.rows
+        assert resumed.best == full.best
+        assert resumed.budget == full.budget
+        assert resumed.rounds == full.rounds - (k + 1)
+
+
+def test_repeat_search_reuses_builds_and_retraces_nothing(ctx):
+    bf, sim, extract, pool, built = ctx
+    run_search(bf, _sh(pool), extract=extract)          # warmup search
+    runner = runner_for(sim)
+    builds0, traces0 = len(built), runner.trace_count
+    res = run_search(bf, _sh(pool), extract=extract)
+    assert len(built) == builds0                        # memoized build
+    assert runner.trace_count == traces0, (
+        f"{runner.trace_count - traces0} retraces in a repeat search")
+    assert res.best is not None
+
+
+def test_bracketed_halving_asks_mixed_horizons(ctx):
+    bf, sim, extract, pool, _ = ctx
+    drv = _sh(pool, brackets=2)
+    pts, us = drv.ask()
+    assert len(pts) == len(pool)            # both brackets in one batch
+    assert len(set(us)) == 2                # ...at two different horizons
+    lad = drv.horizons
+    assert set(us) == {lad[0], lad[1]}
+    # the full bracketed search still lands on a full-horizon best
+    drv2 = _sh(pool, brackets=2)
+    res = run_search(bf, drv2, extract=extract)
+    assert res.best["until"] == MAX_H
+    assert res.front and res.front[0]["until"] == MAX_H
+
+
+def test_cycle_budget_hard_stops_the_search(ctx):
+    bf, sim, extract, pool, _ = ctx
+    free = run_search(bf, _sh(pool), extract=extract)
+    cap = free.budget * 0.4
+    res = run_search(bf, _sh(pool, cycle_budget=cap), extract=extract)
+    assert res.rounds < free.rounds
+    # budget may overshoot by at most the round that crossed the cap
+    assert res.budget >= cap or res.rounds == free.rounds
+    assert res.best is not None             # falls back to best-so-far
+
+
+def test_shape_axes_are_first_class_search_axes():
+    built = []
+
+    def build_fn(shape=None):
+        built.append(dict(shape))
+        return build_family(shape=shape, pattern="mixed", n_reqs=6,
+                            donate=True)
+
+    bf = memoize_build(build_fn)
+
+    pool = SweepSpec.grid({"shape.core": [1, 2, 4],
+                           "conn_latency[-1]": [10.0, 30.0]})
+    drv = SuccessiveHalving(pool, "virtual_time", max_horizon=MAX_H,
+                            min_horizon=200.0, eta=2, seed=0)
+    res = run_search(bf, drv, extract=None)
+    assert len(built) == 1                  # one family serves every round
+    assert built[0] == {"core": 4}          # ...built at the pool maximum
+    assert res.best["until"] == MAX_H
+    assert res.best["shape.core"] in (1, 2, 4)
+    r1 = run_search(bf, SuccessiveHalving(
+        pool, "virtual_time", max_horizon=MAX_H, min_horizon=200.0,
+        eta=2, seed=0))
+    assert r1.rows == res.rows              # reproducible, still one build
+    assert len(built) == 1
+
+
+def test_memoize_build_family_growth_and_reuse():
+    @dataclasses.dataclass
+    class Fam:
+        shape_max: dict
+
+    calls = []
+
+    def build_fn(shape=None, **kw):
+        calls.append(dict(shape))
+        return Fam(dict(shape))
+
+    bf = memoize_build(build_fn)
+    f1 = bf(shape={"core": 2})
+    assert bf(shape={"core": 1}) is f1      # covered: reuse
+    f2 = bf(shape={"core": 4})              # grow: rebuild at the union
+    assert f2 is not f1 and f2.shape_max == {"core": 4}
+    assert bf(shape={"core": 3}) is f2
+    assert calls == [{"core": 2}, {"core": 4}]
+    assert memoize_build(bf) is bf          # idempotent re-wrap
+
+    def plain(n, mode="x"):
+        return (n, mode)
+
+    bp = memoize_build(plain)
+    assert bp(3) is bp(3)                   # positional args memoize too
+    assert bp(3) is not bp(4)
+    assert bp(3, mode="y") is not bp(3)
+
+
+# ---------------------------------------------------------------------------
+# Objective: scalarization, domination ranking, fronts
+# ---------------------------------------------------------------------------
+def test_objective_scalar_and_order():
+    obj = Objective({"t": "min", "q": "max"}, weights={"q": 2.0})
+    assert obj.scalar({"t": 3.0, "q": 1.0}) == 3.0 - 2.0
+    assert obj.scalar({"t": float("nan"), "q": 1.0}) == float("inf")
+    assert obj.scalar({"q": 1.0}) == float("inf")          # missing col
+    rows = [{"t": 2.0, "q": 1.0},     # dominated by row 2
+            {"t": 5.0, "q": 9.0},     # non-dominated (best q)
+            {"t": 1.0, "q": 1.0},     # non-dominated (best t)
+            {"t": 9.0, "q": 0.5}]     # dominated by everything
+    order = obj.order(rows)
+    assert set(order[:2]) == {1, 2}   # non-dominated rows promoted first
+    assert order[-1] == 3
+    # single objective: plain stable sort on the column
+    assert Objective("t").order(rows) == [2, 0, 1, 3]
+
+
+def test_objective_order_ranks_failed_trials_last():
+    """A NaN/missing-objective trial is never dominated (NaN compares
+    false), so domination count alone would promote it over finished
+    but dominated rows — failed trials must rank behind every finished
+    one."""
+    obj = Objective({"a": "min", "b": "min"})
+    rows = [{"a": 2.0, "b": 2.0},                  # dominated by row 1
+            {"a": 1.0, "b": 1.0},                  # the winner
+            {"a": float("nan"), "b": 3.0},         # failed trial
+            {"a": 0.5}]                            # missing objective
+    order = obj.order(rows)
+    assert order[:2] == [1, 0]
+    assert set(order[2:]) == {2, 3}
+
+
+def test_trial_cycles_nan_virtual_time_falls_back_to_horizon():
+    """A NaN virtual_time must not poison the cumulative budget (NaN
+    budget would disarm cycle_budget forever)."""
+    drv = RandomSearch(AXES_SYN, "f", horizon=50.0, batch=2, rounds=2,
+                       seed=0, cycle_budget=150.0)
+    pts, us = drv.ask()
+    drv.tell([{**p, "f": 1.0, "virtual_time": float("nan")}
+              for p in pts])
+    assert drv.state.budget == pytest.approx(100.0)   # 2 lanes x horizon
+    pts, us = drv.ask()
+    drv.tell([{**p, "f": 1.0, "virtual_time": 40.0} for p in pts])
+    assert drv.state.budget == pytest.approx(180.0)
+    assert drv.done                                   # the cap still arms
+
+
+@pytest.mark.parametrize("acq", ["ts", "ucb"])
+def test_batch_bo_proposes_distinct_points_on_small_choice_spaces(acq):
+    """Duplicate pool candidates tie on every acquisition value — every
+    batch (warmup and model rounds alike) must be distinct design
+    points, not distinct pool indices — and an exhausted space ends the
+    search instead of re-proposing."""
+    axes = {"a": [1, 2, 3, 4], "b": [1, 2, 3]}        # 12 combos
+    bo = BatchBO(axes, "f", horizon=1.0, batch=5, rounds=5, pool=64,
+                 seed=0, acquisition=acq)
+    proposed = []
+    while True:
+        asked = bo.ask()
+        if asked is None:
+            break
+        pts, _ = asked
+        keys = [(p["a"], p["b"]) for p in pts]
+        assert len(set(keys)) == len(keys), keys      # distinct in-batch
+        proposed += keys
+        bo.tell([{**p, "f": float(p["a"] + p["b"]), "virtual_time": 1.0}
+                 for p in pts])
+    # never re-proposed across rounds, and covered the whole space
+    assert len(set(proposed)) == len(proposed) == 12
+
+
+def test_objective_front_uses_pareto():
+    obj = Objective({"t": "min", "q": "max"})
+    rows = [{"t": 1.0, "q": 1.0}, {"t": 2.0, "q": 2.0},
+            {"t": 3.0, "q": 1.5}]
+    assert obj.front(rows) == rows[:2]
+
+
+def test_multi_objective_halving_promotes_non_dominated(ctx):
+    bf, sim, extract, pool, _ = ctx
+    obj = Objective({"est_finish": "min", "kind.l1.extra_hit_rate": "min"})
+    drv = SuccessiveHalving(pool, obj, max_horizon=MAX_H,
+                            min_horizon=60.0, eta=3, seed=0)
+    res = run_search(bf, drv, extract=extract)
+    assert len(res.front) >= 1
+    front = obj.front(res.front)
+    assert front == res.front               # front is itself non-dominated
+    assert all(t["until"] == MAX_H for t in res.front)
+
+
+# ---------------------------------------------------------------------------
+# BatchBO / RandomSearch on a synthetic objective (no simulator): the
+# ask/tell contract is host-side, so convergence is testable directly.
+# ---------------------------------------------------------------------------
+def _drive(driver, fn):
+    while True:
+        asked = driver.ask()
+        if asked is None:
+            return driver
+        pts, us = asked
+        driver.tell([{**p, "f": fn(p), "virtual_time": u}
+                     for p, u in zip(pts, us)])
+
+
+def _quad(p):
+    return (p["x"] - 0.31) ** 2 + (p["y"] - 0.68) ** 2
+
+
+AXES_SYN = {"x": (0.0, 1.0), "y": (0.0, 1.0)}
+
+
+def test_batch_bo_converges_and_beats_random():
+    bo = _drive(BatchBO(AXES_SYN, "f", horizon=1.0, batch=8, rounds=6,
+                        pool=128, seed=3), _quad)
+    rs = _drive(RandomSearch(AXES_SYN, "f", horizon=1.0, batch=8, rounds=6,
+                             seed=3), _quad)
+    assert len(bo.state.history) == len(rs.state.history) == 48
+    assert bo.best()["f"] < 0.02            # near the (0.31, 0.68) optimum
+    assert bo.best()["f"] < rs.best()["f"]  # the surrogate earns its keep
+
+
+def test_batch_bo_ucb_and_log_and_choice_axes():
+    axes = {"x": (0.1, 10.0, "log"), "k": [1, 2, 4, 8], "y": (0.0, 1.0)}
+
+    def fn(p):
+        return (math.log10(p["x"]) - 0.5) ** 2 + (p["k"] - 4) ** 2 / 16.0 \
+            + (p["y"] - 0.5) ** 2
+
+    bo = _drive(BatchBO(axes, "f", horizon=1.0, batch=6, rounds=5,
+                        pool=96, seed=7, acquisition="ucb"), fn)
+    best = bo.best()
+    assert best["f"] < 0.15
+    assert type(best["k"]) is int           # choice axes stay Python ints
+
+
+def test_batch_bo_is_reproducible_and_resumable():
+    b1 = _drive(BatchBO(AXES_SYN, "f", horizon=1.0, batch=4, rounds=4,
+                        pool=64, seed=11), _quad)
+    b2 = _drive(BatchBO(AXES_SYN, "f", horizon=1.0, batch=4, rounds=4,
+                        pool=64, seed=11), _quad)
+    assert b1.state.history == b2.state.history
+
+    # stop after 2 rounds, serialize, resume: identical remaining rounds
+    b3 = BatchBO(AXES_SYN, "f", horizon=1.0, batch=4, rounds=4,
+                 pool=64, seed=11)
+    for _ in range(2):
+        pts, us = b3.ask()
+        b3.tell([{**p, "f": _quad(p), "virtual_time": u}
+                 for p, u in zip(pts, us)])
+    state = SearchState.from_json(b3.state.to_json())
+    b4 = _drive(BatchBO(AXES_SYN, "f", horizon=1.0, batch=4, rounds=4,
+                        pool=64, seed=11, state=state), _quad)
+    assert b4.state.history == b1.state.history
+
+
+def test_batch_bo_never_reproposes_evaluated_points():
+    seen = []
+
+    def fn(p):
+        seen.append((p["x"], p["y"]))
+        return _quad(p)
+
+    _drive(BatchBO(AXES_SYN, "f", horizon=1.0, batch=8, rounds=5,
+                   pool=64, seed=5), fn)
+    assert len(seen) == len(set(seen))
+
+
+def test_random_search_determinism_and_budget_cap():
+    r1 = _drive(RandomSearch(AXES_SYN, "f", horizon=100.0, batch=8,
+                             rounds=4, seed=2), _quad)
+    r2 = _drive(RandomSearch(AXES_SYN, "f", horizon=100.0, batch=8,
+                             rounds=4, seed=2), _quad)
+    assert r1.state.history == r2.state.history
+    assert r1.state.budget == pytest.approx(100.0 * 32)
+    capped = _drive(RandomSearch(AXES_SYN, "f", horizon=100.0, batch=8,
+                                 rounds=4, seed=2, cycle_budget=1500.0),
+                    _quad)
+    assert capped.state.round == 2          # 1600 >= 1500 after round 2
+    assert capped.state.history == r1.state.history[:16]
+
+
+def test_search_state_json_roundtrip_preserves_everything():
+    s = SearchState(round=3, budget=123.5,
+                    history=[{"a": 1.0, "until": 10.0, "round": 0}],
+                    driver={"brackets": [{"rung": 1, "alive": [{"a": 1}]}]},
+                    rng=np.random.default_rng(9).bit_generator.state)
+    back = SearchState.from_json(s.to_json())
+    assert back == s
+    assert json.loads(s.to_json())["budget"] == 123.5
+    # the restored rng state drives an identical stream
+    g = np.random.default_rng(0)
+    g.bit_generator.state = back.rng
+    h = np.random.default_rng(9)
+    assert g.integers(0, 1 << 30) == h.integers(0, 1 << 30)
+
+
+def test_tell_without_ask_raises():
+    drv = RandomSearch(AXES_SYN, "f", horizon=1.0, batch=2, rounds=1)
+    with pytest.raises(AssertionError, match="pending ask"):
+        drv.tell([])

@@ -34,6 +34,64 @@ def test_random_is_seeded_and_in_bounds():
     assert len({p["u"] for p in s1}) > 1         # actually samples
 
 
+def test_random_per_axis_streams_survive_style_and_order_changes():
+    """Axis substreams are keyed on (seed, name): the values axis "u"
+    yields must be identical whether its neighbour is a choice list or a
+    (lo, hi) range, and whatever the dict order or axis count."""
+    u_alone = [p["u"] for p in SweepSpec.random({"u": (2.0, 8.0)}, 16,
+                                                seed=3)]
+    with_choice = SweepSpec.random({"u": (2.0, 8.0), "c": [4, 8, 16]},
+                                   16, seed=3)
+    with_range = SweepSpec.random({"c": (0.0, 1.0), "u": (2.0, 8.0)},
+                                  16, seed=3)
+    assert [p["u"] for p in with_choice] == u_alone
+    assert [p["u"] for p in with_range] == u_alone
+    assert [p["c"] for p in with_choice] != [p["c"] for p in with_range]
+
+
+def test_random_int_axes_come_back_as_python_ints():
+    import numpy as np
+    spec = SweepSpec.random({"r": (2, 8),                  # int range
+                             "c": [1, 2, 4, 8],            # int choice
+                             "n": [np.int32(3), np.int32(5), np.int32(9)],
+                             "f": (2.0, 8.0)}, 32, seed=11)
+    for p in spec:
+        assert type(p["r"]) is int and 2 <= p["r"] <= 8    # inclusive
+        assert type(p["c"]) is int and p["c"] in (1, 2, 4, 8)
+        assert type(p["n"]) is int and p["n"] in (3, 5, 9)
+        assert type(p["f"]) is float
+    assert {p["r"] for p in spec} == set(range(2, 9))      # hits both ends
+    # same-seed determinism holds for every style
+    assert spec.points == SweepSpec.random(
+        {"r": (2, 8), "c": [1, 2, 4, 8],
+         "n": [np.int32(3), np.int32(5), np.int32(9)],
+         "f": (2.0, 8.0)}, 32, seed=11).points
+
+
+def test_explicit_rejects_ragged_points_naming_index_and_keys():
+    with pytest.raises(ValueError) as e:
+        SweepSpec.explicit([{"a": 1.0, "b": 2.0},
+                            {"a": 1.0, "b": 2.0},
+                            {"a": 3.0, "c": 4.0}])
+    msg = str(e.value)
+    assert "point 2" in msg                 # the offending index
+    assert "'b'" in msg and "'c'" in msg    # missing and extra keys
+    # uniform points construct fine
+    SweepSpec.explicit([{"a": 1.0}, {"a": 2.0}])
+    # different static groups stack separately, so their traced axes
+    # may legitimately differ — no ragged=True needed
+    spec = SweepSpec.explicit([{"static.x": 1, "a": 1.0},
+                               {"static.x": 2, "b": 2.0}])
+    assert len(spec) == 2
+    # ...but raggedness *within* one static group still raises
+    with pytest.raises(ValueError, match="point 1"):
+        SweepSpec.explicit([{"static.x": 1, "a": 1.0},
+                            {"static.x": 1, "b": 2.0}])
+    # and ragged=True skips the check entirely
+    SweepSpec.explicit([{"static.x": 1, "a": 1.0},
+                        {"static.x": 1, "b": 2.0}], ragged=True)
+
+
 def test_split_static_groups_and_preserves_indices():
     spec = SweepSpec.grid({"static.super_epoch": [1, 4],
                            "conn_latency": [5.0, 9.0]})
