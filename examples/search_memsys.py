@@ -7,7 +7,12 @@ longer one, and so on until only a handful reach the full horizon —
 finding the minimum-completion-time config for a fraction of the
 exhaustive simulated-cycle budget.  Every round executes as one
 vmapped, chunk-laddered sweep (per-lane horizons; zero recompiles after
-warmup), and the search is resumable: its ``SearchState`` is plain JSON.
+warmup).  Promotions are *warm*: a promoted config resumes from its
+frozen rung-end ``SimState`` instead of replaying from cycle 0, so the
+budget counts only horizon increments (DSE.md "Warm-state
+promotions").  The search is resumable: its ``SearchState`` is plain
+JSON, and ``save_search``/``load_search`` extend the snapshot with the
+frozen rung states so a resumed search's budget matches bit-exactly.
 
 The objective is ``est_finish`` — estimated completion time
 ``virtual_time * total / done``, which ranks configs by throughput

@@ -1,2 +1,2 @@
-from .checkpoint import (CheckpointManager, restore_checkpoint,  # noqa
-                         save_checkpoint)
+from .checkpoint import (CheckpointManager, list_steps,  # noqa
+                         restore_checkpoint, save_checkpoint)

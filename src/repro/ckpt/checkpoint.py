@@ -99,6 +99,7 @@ def restore_checkpoint(path: str, template, step: int | None = None,
     step = steps[-1] if step is None else step
     d = os.path.join(path, f"step_{step:08d}")
     manifest = json.load(open(os.path.join(d, "manifest.json")))
+    tmpl_flat = _flatten(template)
     with np.load(os.path.join(d, "arrays.npz")) as z:
         flat = {}
         for k in z.files:
@@ -106,24 +107,27 @@ def restore_checkpoint(path: str, template, step: int | None = None,
             logical = manifest["leaves"][k]["dtype"]
             if str(v.dtype) != logical:   # bf16 stored as f32
                 v = jax.numpy.asarray(v).astype(logical)
+            # align to the template dtype while still in numpy: a
+            # jnp.asarray on an int64/float64 leaf with x64 disabled
+            # silently truncates the *values* — no later astype can
+            # recover them — so dtype fixup must precede any jnp hop
+            want = getattr(tmpl_flat.get(k), "dtype", None)
+            if want is not None and v.dtype != want:
+                v = v.astype(want)
             flat[k] = v
-    tree = _unflatten_into(flat, template)
     if shardings is not None:
         sh_flat = _flatten(shardings)
-        tree = _unflatten_into(
-            {k: jax.device_put(v, sh_flat[k])
-             for k, v in _flatten(tree).items()}, template)
+        flat = {k: jax.device_put(v, sh_flat[k]) for k, v in flat.items()}
     else:
-        tree = jax.tree.map(lambda x: jax.numpy.asarray(x), tree)
-    # restore original dtypes (npz keeps them; bf16 roundtrips via jnp)
-    tmpl_flat = _flatten(template)
-    out_flat = _flatten(tree)
-    fixed = {}
-    for k, v in out_flat.items():
-        want = getattr(tmpl_flat[k], "dtype", None)
-        fixed[k] = v.astype(want) if want is not None and v.dtype != want \
-            else v
-    return _unflatten_into(fixed, template), manifest
+        # device arrays for every dtype jax can represent exactly; a
+        # 64-bit leaf under disabled x64 stays a host numpy array (the
+        # exact values) instead of a corrupted device array
+        flat = {k: (v if (getattr(v, "dtype", None) is not None
+                          and jax.dtypes.canonicalize_dtype(v.dtype)
+                          != v.dtype)
+                    else jax.numpy.asarray(v))
+                for k, v in flat.items()}
+    return _unflatten_into(flat, template), manifest
 
 
 def list_steps(path: str):

@@ -36,14 +36,15 @@ of its shape — the invariants that make sweep results trustworthy
 from .family import TopologyFamily
 from .report import (dominates, format_table, pareto_front, score_vector,
                      tidy, to_csv, to_json)
-from .runner import (BatchRunner, default_extract, extract_rows, lane,
+from .runner import (BatchRunner, LaneStates, ResumeHandle,
+                     default_extract, extract_rows, lane,
                      memoize_build, run_sweep, runner_for,
                      stack_state_list, stack_states)
 from .schedule import ChunkAutotuner, ChunkSchedule, auto_schedule, \
     make_ladder
 from .search import (BatchBO, Objective, RandomSearch, SearchDriver,
                      SearchResult, SearchState, SuccessiveHalving,
-                     horizon_ladder, run_search)
+                     horizon_ladder, load_search, run_search, save_search)
 from .sweep import (SweepSpec, apply_point, axis_error, build_param_batch,
                     split_shape, stack_params, valid_axes)
 
@@ -52,10 +53,11 @@ __all__ = [
     "build_param_batch", "stack_params", "split_shape", "TopologyFamily",
     "BatchRunner", "run_sweep", "stack_states", "stack_state_list", "lane",
     "default_extract", "extract_rows", "runner_for", "memoize_build",
+    "ResumeHandle", "LaneStates",
     "ChunkSchedule", "ChunkAutotuner", "auto_schedule", "make_ladder",
     "SearchDriver", "SearchState", "SearchResult", "Objective",
     "run_search", "SuccessiveHalving", "horizon_ladder", "BatchBO",
-    "RandomSearch",
+    "RandomSearch", "save_search", "load_search",
     "pareto_front", "dominates", "score_vector", "tidy", "to_csv",
     "to_json", "format_table",
 ]

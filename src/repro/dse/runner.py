@@ -59,6 +59,71 @@ from .sweep import (STATIC_PREFIX, SweepSpec, apply_point,
 INT32_MAX = np.int32(2**31 - 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class ResumeHandle:
+    """A frozen lane's continuation point: the final :class:`SimState` of
+    a finished run plus where it stopped.
+
+    The engine's horizon is an absolute traced operand and its epoch
+    sequence is purely state-determined, so feeding ``state`` back in as
+    a lane's initial state and running to a *longer* ``until`` continues
+    bit-exactly where the run froze — the warm-promotion contract of
+    ``repro.dse.search`` (a resumed lane equals a cold run to the same
+    horizon, pinned by ``tests/dse/test_warm_resume.py``).  ``time`` and
+    ``epochs`` let budget accounting charge only the increment and the
+    round loop cap epochs correctly from the first round.
+    """
+
+    state: SimState
+    time: float        # frozen virtual_time
+    until: float       # horizon the state was run to
+    epochs: int        # engine epochs executed so far
+
+
+class LaneStates:
+    """Lazy per-point access to the final states of a finished sweep.
+
+    ``run_sweep(return_states=True)`` hands every group's stacked final
+    state to one of these, reusing the single host transfer the row
+    extraction already paid — no extra device syncs.  Only the lanes a
+    caller actually asks for are sliced (a halving search touches the
+    survivors, not the whole rung).  ``handle(i, until)`` packages lane
+    ``i`` as a :class:`ResumeHandle` for a later warm resume.
+    """
+
+    def __init__(self):
+        self._groups: list = []            # host-side stacked trees
+        self._where: dict[int, tuple[int, int]] = {}
+
+    def add_group(self, host_tree, indices: Sequence[int]) -> None:
+        g = len(self._groups)
+        self._groups.append(host_tree)
+        for j, i in enumerate(indices):
+            self._where[int(i)] = (g, j)
+
+    def __contains__(self, i) -> bool:
+        return int(i) in self._where
+
+    def __len__(self) -> int:
+        return len(self._where)
+
+    def state(self, i: int) -> SimState:
+        g, j = self._where[int(i)]
+        return lane(self._groups[g], j)
+
+    def time(self, i: int) -> float:
+        g, j = self._where[int(i)]
+        return float(self._groups[g].time[j])
+
+    def epochs(self, i: int) -> int:
+        g, j = self._where[int(i)]
+        return int(self._groups[g].stats.epochs[j])
+
+    def handle(self, i: int, until: float) -> ResumeHandle:
+        return ResumeHandle(state=self.state(i), time=self.time(i),
+                            until=float(until), epochs=self.epochs(i))
+
+
 def stack_states(state: SimState, n: int) -> SimState:
     """``n`` independent copies of ``state`` stacked on a new leading axis.
 
@@ -304,7 +369,8 @@ class BatchRunner:
                    params_b: SimParams, until,
                    schedule: ChunkSchedule | None = None,
                    max_epochs=2_000_000,
-                   shard: bool = False) -> SimState:
+                   shard: bool = False,
+                   init_epochs=None) -> SimState:
         """Straggler-free streaming run: rounds + lane compaction + the
         chunk ladder (DSE.md "Rounds and the chunk ladder").
 
@@ -322,6 +388,13 @@ class BatchRunner:
         — with a one-shot chunk autotune for large B whose winning rung
         is cached on this runner, so later calls skip the probe.
         Returns the stacked final states in point order.
+
+        ``init_epochs`` (scalar or per-lane) is the epoch count already
+        recorded in each lane's *initial* state — warm resumes pass the
+        epochs a :class:`ResumeHandle` carries so the very first round's
+        quantum cap advances from there instead of from zero (a cap
+        below the state's own counter would execute an empty round; the
+        liveness pull self-corrects, but only after a wasted dispatch).
         """
         B = int(params_b.conn_latency.shape[0])
         per_lane = isinstance(template, (list, tuple))
@@ -339,7 +412,9 @@ class BatchRunner:
         else:
             schedule = dataclasses.replace(schedule)   # never mutate input
 
-        ep = np.zeros(B, np.int64)          # per-lane epochs so far
+        ep = np.broadcast_to(               # per-lane epochs so far
+            np.asarray(0 if init_epochs is None else init_epochs,
+                       np.int64), (B,)).copy()
         done: list[tuple[list[int], SimState]] = []   # finished segments
         pending = list(range(B))            # configs not yet started
         pool: list[tuple[list[int], SimState]] = []   # alive, unscheduled
@@ -561,7 +636,9 @@ def _static_kwarg_names(build_fn) -> list[str] | None:
 def run_sweep(build_fn: Callable, spec: SweepSpec, until,
               extract: Callable | None = None, chunk: int | None = None,
               max_epochs: int = 2_000_000, shard: bool = False,
-              schedule: ChunkSchedule | None = None) -> list[dict]:
+              schedule: ChunkSchedule | None = None,
+              resume: Sequence[ResumeHandle | None] | None = None,
+              return_states: bool = False):
     """Simulate every design point of ``spec`` and return tidy result rows.
 
     ``build_fn(**static_kwargs) -> (sim, state)`` builds the topology; it
@@ -595,12 +672,28 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
 
     All axis paths are validated before anything runs: unknown axes
     raise ``ValueError`` naming the path and the valid alternatives.
+
+    **Warm resume** (``resume=``): a per-point sequence of
+    :class:`ResumeHandle` / ``None``.  A handled point's lane starts
+    from the handle's frozen final state instead of a fresh template
+    copy and simply runs on to its (longer, absolute) ``until`` — the
+    engine's epoch sequence is state-determined, so the result row is
+    bit-identical to a cold run at that horizon while only the cycles
+    *since the handle* are newly simulated.  ``return_states=True``
+    returns ``(rows, LaneStates)`` — lazy per-point final states (from
+    the same host transfer the rows use) that a search can package into
+    next-rung handles.
     """
     if chunk is not None and schedule is not None:
         raise ValueError(
             "pass either chunk= (pins the ladder top) or schedule= (the "
             "whole policy), not both — a schedule carries its own ladder")
+    if resume is not None and len(resume) != len(spec):
+        raise ValueError(
+            f"resume= must give one handle (or None) per point: "
+            f"{len(resume)} != {len(spec)}")
     rows: list[dict | None] = [None] * len(spec)
+    lane_states = LaneStates() if return_states else None
     until_arr = np.broadcast_to(np.asarray(until, np.float32), (len(spec),))
     shape_mode = spec.has_shape_axes()
     static_ok = _static_kwarg_names(build_fn)
@@ -617,6 +710,11 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
         # neither the whole-spec union nor a single target would do)
         group_spec = SweepSpec(tuple(traced))
         u_group = until_arr[np.asarray(indices)]
+        res = ([resume[i] for i in indices] if resume is not None
+               else None)
+        warm = res is not None and any(h is not None for h in res)
+        init_ep = (np.asarray([int(h.epochs) if h is not None else 0
+                               for h in res], np.int64) if warm else None)
         sched = auto_schedule(len(indices), chunk=chunk) \
             if schedule is None and chunk is not None else schedule
         if shape_mode:
@@ -648,22 +746,35 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
                 plist.append(fam.params_for(
                     full, apply_point(base, traced_pt), masks=m))
                 states.append(fam.state_for(full, masks=m))
+            if warm:                # handled lanes continue, not restart
+                states = [h.state if h is not None else s
+                          for h, s in zip(res, states)]
             params_b = stack_params(plist)
             runner = runner_for(sim)
             out = runner.run_rounds(states, params_b, u_group,
                                     schedule=sched, max_epochs=max_epochs,
-                                    shard=shard)
+                                    shard=shard, init_epochs=init_ep)
         else:
             sim, st = build_fn(**static_kwargs)
             group_spec.validate(sim)
             params_b = build_param_batch(sim, traced)
             runner = runner_for(sim)
-            out = runner.run_rounds(st, params_b, u_group,
+            template = ([h.state if h is not None else st for h in res]
+                        if warm else st)
+            out = runner.run_rounds(template, params_b, u_group,
                                     schedule=sched, max_epochs=max_epochs,
-                                    shard=shard)
-        group_rows = extract_rows(sim, out, len(indices), extract)
+                                    shard=shard, init_epochs=init_ep)
+        # one device_get serves both the result rows and (when asked)
+        # the resumable final states — never two transfers per group
+        ex = extract or default_extract
+        host = jax.device_get(out)
+        group_rows = [ex(sim, lane(host, j)) for j in range(len(indices))]
+        if lane_states is not None:
+            lane_states.add_group(host, indices)
         for j, i in enumerate(indices):
             row = dict(spec.points[i])
             row.update(group_rows[j])
             rows[i] = row
+    if return_states:
+        return list(rows), lane_states
     return list(rows)

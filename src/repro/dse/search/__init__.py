@@ -26,9 +26,10 @@ from .bo import BatchBO, RandomSearch
 from .driver import (Objective, SearchDriver, SearchResult, SearchState,
                      run_search)
 from .halving import SuccessiveHalving, horizon_ladder
+from .warm import load_search, save_search
 
 __all__ = [
     "Objective", "SearchDriver", "SearchResult", "SearchState",
     "run_search", "SuccessiveHalving", "horizon_ladder", "BatchBO",
-    "RandomSearch",
+    "RandomSearch", "save_search", "load_search",
 ]

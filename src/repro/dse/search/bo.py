@@ -99,6 +99,17 @@ def _rbf(a: np.ndarray, b: np.ndarray, ls: float) -> np.ndarray:
     return np.exp(-0.5 * d2 / (ls * ls))
 
 
+_erf = np.vectorize(math.erf)
+
+
+def _ncdf(z: np.ndarray) -> np.ndarray:
+    return 0.5 * (1.0 + _erf(z / math.sqrt(2.0)))
+
+
+def _npdf(z: np.ndarray) -> np.ndarray:
+    return np.exp(-0.5 * z * z) / math.sqrt(2.0 * math.pi)
+
+
 class BatchBO(SearchDriver):
     """Batched Bayesian optimization over continuous/choice axes.
 
@@ -106,9 +117,14 @@ class BatchBO(SearchDriver):
     ``batch`` random points (the surrogate needs data); each later round
     refits the GP on all history and proposes ``batch`` points from a
     ``pool``-sized fresh candidate set by ``acquisition`` — ``"ts"``
-    (batched Thompson sampling, the default) or ``"ucb"``
-    (``mean − beta·std``).  Exact duplicates of evaluated points are
-    excluded from the pool.  ``lengthscale`` is the RBF lengthscale on
+    (batched Thompson sampling, the default), ``"ucb"``
+    (``mean − beta·std``) or ``"qei"`` (greedy constant-liar expected
+    improvement: pick the max-EI candidate, append it to the training
+    set with a *liar* observation at the incumbent best, refit, repeat
+    — each pick's posterior collapses around the previous picks, so
+    near-duplicates lose their EI and the batch spreads; the classic
+    sequential-simulation qEI approximation).  Exact duplicates of
+    evaluated points are excluded from the pool.  ``lengthscale`` is the RBF lengthscale on
     the unit cube; ``noise`` the observation-noise variance (objectives
     here are deterministic simulations — the default is just jitter).
     Multi-objective specs are scalarized (:class:`Objective` weights).
@@ -122,7 +138,7 @@ class BatchBO(SearchDriver):
                  state: SearchState | None = None):
         super().__init__(objective, seed=seed, cycle_budget=cycle_budget,
                          state=state)
-        assert acquisition in ("ts", "ucb"), acquisition
+        assert acquisition in ("ts", "ucb", "qei"), acquisition
         self.axes = dict(axes)
         self.horizon = float(horizon)
         self.batch = int(batch)
@@ -193,14 +209,17 @@ class BatchBO(SearchDriver):
         yn = (y - mu0) / sd0
         p = self._encode(cand)
 
-        mean, cov = self._posterior(x, yn, p)
         q = min(self.batch, len(cand))
-        if self.acquisition == "ucb":
-            std = np.sqrt(np.clip(np.diag(cov), 1e-12, None))
-            picks = list(np.argsort(mean - self.beta * std,
-                                    kind="stable")[:q])
+        if self.acquisition == "qei":
+            picks = self._qei(x, yn, p, q)
         else:
-            picks = self._thompson(mean, cov, q)
+            mean, cov = self._posterior(x, yn, p)
+            if self.acquisition == "ucb":
+                std = np.sqrt(np.clip(np.diag(cov), 1e-12, None))
+                picks = list(np.argsort(mean - self.beta * std,
+                                        kind="stable")[:q])
+            else:
+                picks = self._thompson(mean, cov, q)
         return [dict(cand[i]) for i in picks], [self.horizon] * q
 
     def _posterior(self, x, yn, p):
@@ -223,6 +242,28 @@ class BatchBO(SearchDriver):
         mean = ks.T @ alpha
         cov = _rbf(p, p, self.lengthscale) - v.T @ v
         return mean, cov
+
+    def _qei(self, x, yn, p, q: int) -> list[int]:
+        """Greedy constant-liar qEI over pool ``p``: after each pick the
+        picked location enters the training set with the incumbent-best
+        value (the *liar*), so the refitted posterior's uncertainty —
+        and therefore EI — collapses around it and the next pick lands
+        somewhere informative instead of on a near-duplicate.  q small
+        Cholesky refits on (history + <q) points: host-side noise."""
+        xs, ys = [np.asarray(r) for r in x], list(np.asarray(yn))
+        best = float(np.min(yn))
+        picks: list[int] = []
+        for _ in range(q):
+            mean, cov = self._posterior(np.asarray(xs), np.asarray(ys), p)
+            std = np.sqrt(np.clip(np.diag(cov), 1e-12, None))
+            z = (best - mean) / std
+            ei = (best - mean) * _ncdf(z) + std * _npdf(z)
+            if picks:
+                ei[np.asarray(picks, int)] = -np.inf
+            picks.append(int(np.argmax(ei)))     # ties -> lowest index
+            xs.append(p[picks[-1]])
+            ys.append(best)                      # the constant liar
+        return picks
 
     def _thompson(self, mean, cov, q: int) -> list[int]:
         """One joint posterior draw per batch slot; each slot takes its

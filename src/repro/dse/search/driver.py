@@ -20,8 +20,10 @@ bookkeeping over result rows).
   trajectory (rows are bit-reproducible, selection is stable-sorted).
 * :class:`SearchDriver` — the loop contract plus shared bookkeeping
   (budget accounting in simulated cycles: each trial costs the cycles it
-  actually simulated, ``row["virtual_time"]`` when the extractor reports
-  it, else its horizon).
+  *newly* simulated — ``row["virtual_time"]`` when the extractor reports
+  it, else its horizon, minus the frozen time of the trial's
+  :class:`~repro.dse.runner.ResumeHandle` when the lane resumed from a
+  previous rung's state instead of replaying from cycle 0).
 * :func:`run_search` — the driver loop: memoize the build function
   (:func:`~repro.dse.runner.memoize_build`, so every round reuses one
   built simulation and its tuned ladder), then ``ask`` → ``run_sweep``
@@ -40,7 +42,7 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 from ..report import MAX, MIN, pareto_front, score_vector, _dominates_scores
-from ..runner import memoize_build, run_sweep
+from ..runner import LaneStates, ResumeHandle, memoize_build, run_sweep
 from ..schedule import ChunkSchedule
 from ..sweep import SweepSpec
 
@@ -157,12 +159,17 @@ class SearchDriver:
     """Base class: the ``ask``/``tell`` loop contract plus shared
     bookkeeping (history, simulated-cycle budget, RNG persistence).
 
-    Subclasses implement ``_ask() -> (points, horizons) | None`` and
-    ``_tell(points, horizons, rows)`` (selection/acquisition), and may
-    override ``done``.  ``seed`` feeds a numpy RNG whose state rides
-    :class:`SearchState`, so a resumed driver continues the same
-    stream.  ``cycle_budget`` (optional) hard-stops the search once the
-    cumulative simulated-cycle spend reaches it.
+    Subclasses implement ``_ask() -> (points, horizons) | None`` —
+    optionally ``(points, horizons, handles)`` with one
+    :class:`~repro.dse.runner.ResumeHandle` (or None) per point, the
+    warm-resume contract — and ``_tell(points, horizons, rows,
+    states=None)`` (selection/acquisition; ``states`` is the sweep's
+    :class:`~repro.dse.runner.LaneStates` when the driver declared
+    ``wants_states``), and may override ``done``.  ``seed`` feeds a
+    numpy RNG whose state rides :class:`SearchState`, so a resumed
+    driver continues the same stream.  ``cycle_budget`` (optional)
+    hard-stops the search once the cumulative simulated-cycle spend
+    reaches it.
     """
 
     def __init__(self, objective: str | Mapping[str, str] | Objective,
@@ -176,17 +183,30 @@ class SearchDriver:
         if self.state.rng is not None:
             self._rng.bit_generator.state = self.state.rng
         self._asked: tuple[list[dict], list[float]] | None = None
+        self._handles: list[ResumeHandle | None] | None = None
+        self._costs: list[float] | None = None
 
     # -- the loop contract ------------------------------------------------
     def ask(self) -> tuple[list[dict], list[float]] | None:
         """The next round: ``(points, horizons)`` — parallel lists, one
         horizon (simulated-cycle ``until``) per design point — or
-        ``None`` when the search is finished."""
+        ``None`` when the search is finished.  When the driver resumes
+        lanes from previous-rung states, the per-point handles are on
+        :attr:`resume_handles` (``run_search`` feeds them to
+        ``run_sweep(resume=...)``)."""
         if self.done:
             return None
         asked = self._ask()
+        self._handles = None
         if asked is not None:
-            points, horizons = asked
+            if len(asked) == 3:
+                points, horizons, handles = asked
+                if handles is not None and any(h is not None
+                                               for h in handles):
+                    assert len(handles) == len(points), asked
+                    self._handles = list(handles)
+            else:
+                points, horizons = asked
             assert len(points) == len(horizons), asked
             if not points:
                 return None
@@ -194,37 +214,74 @@ class SearchDriver:
             return self._asked
         return None
 
-    def tell(self, rows: Sequence[Mapping]) -> None:
+    @property
+    def resume_handles(self) -> "list[ResumeHandle | None] | None":
+        """Per-point resume handles of the pending ask (or None when
+        every lane starts cold)."""
+        return self._handles
+
+    @property
+    def wants_states(self) -> bool:
+        """Whether ``tell`` should receive the sweep's final lane states
+        (:class:`~repro.dse.runner.LaneStates`).  Drivers that promote
+        warm override this; the loop only pays the (already-transferred)
+        state bookkeeping when someone will use it."""
+        return False
+
+    def tell(self, rows: Sequence[Mapping],
+             states: LaneStates | None = None) -> None:
         """Feed back the result rows of the last ``ask``, in ask order.
-        Records history + budget, lets the driver select/refit, advances
-        the round counter and snapshots the RNG state (making this a
-        valid resume point)."""
+        Records history + budget (each trial's *incremental* cycles —
+        see :meth:`_trial_cycles` — also stored per trial under
+        ``"cycles"``), lets the driver select/refit, advances the round
+        counter and snapshots the RNG state (making this a valid resume
+        point).  ``states`` carries the sweep's final lane states when
+        the driver ``wants_states``."""
         assert self._asked is not None, "tell() without a pending ask()"
         points, horizons = self._asked
         assert len(rows) == len(points), (len(rows), len(points))
-        for u, row in zip(horizons, rows):
+        costs = []
+        for j, (u, row) in enumerate(zip(horizons, rows)):
+            h = self._handles[j] if self._handles is not None else None
+            cost = self._trial_cycles(u, row, h)
             trial = dict(row)
             trial["until"] = u
             trial["round"] = self.state.round
+            trial["cycles"] = cost
             self.state.history.append(trial)
-            self.state.budget += self._trial_cycles(u, row)
-        self._tell(points, horizons, rows)
+            self.state.budget += cost
+            costs.append(cost)
+        self._costs = costs
+        self._tell(points, horizons, rows, states)
         self._asked = None
+        self._handles = None
+        self._costs = None
         self.state.round += 1
         self.state.rng = self._rng.bit_generator.state
 
     @staticmethod
-    def _trial_cycles(until: float, row: Mapping) -> float:
-        """Simulated-cycle cost of one trial: the cycles it actually ran
-        (a lane that drains early costs its own drain time, not the
-        horizon), falling back to the horizon when the extractor does
-        not report a usable ``virtual_time`` (a NaN would poison the
-        cumulative budget and permanently disarm ``cycle_budget``)."""
+    def _trial_cycles(until: float, row: Mapping,
+                      handle: ResumeHandle | None = None) -> float:
+        """Simulated-cycle cost of one trial: the cycles it *newly* ran.
+
+        A cold trial costs the cycles it actually simulated (a lane that
+        drains early costs its own drain time, not the horizon), falling
+        back to the horizon when the extractor does not report a usable
+        ``virtual_time`` (a NaN would poison the cumulative budget and
+        permanently disarm ``cycle_budget``).  A warm trial resumed from
+        ``handle`` costs only the increment past the handle's frozen
+        time — the whole point of state-resumed promotion: a config
+        promoted up an entire horizon ladder costs its *final* virtual
+        time, not the sum of every rung's replay.
+        """
         try:
             v = float(row["virtual_time"])
         except (KeyError, TypeError, ValueError):
-            return float(until)
-        return float(until) if v != v else v
+            v = float(until)
+        if v != v:
+            v = float(until)
+        start = float(handle.time) if handle is not None else 0.0
+        return max(v - start, 0.0)
 
     @property
     def done(self) -> bool:
@@ -237,7 +294,8 @@ class SearchDriver:
     def _ask(self) -> tuple[list[dict], list[float]] | None:
         raise NotImplementedError
 
-    def _tell(self, points, horizons, rows) -> None:
+    def _tell(self, points, horizons, rows,
+              states: LaneStates | None = None) -> None:
         pass
 
     def _done(self) -> bool:
@@ -326,11 +384,15 @@ def run_search(build_fn: Callable, driver: SearchDriver, *,
         # drops an axis key from some points fails here, naming the
         # point, not as an opaque stacking error inside the sweep
         spec = SweepSpec.explicit(points)
-        rows = run_sweep(build_fn, spec,
-                         until=np.asarray(horizons, np.float32),
-                         extract=extract, chunk=chunk, schedule=schedule,
-                         max_epochs=max_epochs, shard=shard)
-        driver.tell(rows)
+        want = driver.wants_states
+        out = run_sweep(build_fn, spec,
+                        until=np.asarray(horizons, np.float32),
+                        extract=extract, chunk=chunk, schedule=schedule,
+                        max_epochs=max_epochs, shard=shard,
+                        resume=driver.resume_handles,
+                        return_states=want)
+        rows, states = out if want else (out, None)
+        driver.tell(rows, states=states)
         rounds += 1
         if callback is not None:
             callback(driver)

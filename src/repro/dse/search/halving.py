@@ -26,12 +26,29 @@ stably sort the scalarized column; multi-objective pools promote
 non-dominated rows first (via :func:`~repro.dse.report.dominates`).
 Rows are bit-reproducible and the sort is stable, so a seeded search's
 trajectory is bit-reproducible and resumable (``state=``).
+
+**Warm promotion** (``warm=True``, the default): a promoted config does
+not replay from cycle 0 at the next rung — its rung-end
+:class:`~repro.core.SimState` rides a
+:class:`~repro.dse.runner.ResumeHandle` into the next round's stacked
+batch and the lane simply *continues* to the longer horizon.  The
+engine's epoch sequence is state-determined and ``until`` is an
+absolute traced operand, so a resumed row is bit-identical to a cold
+run at the same horizon (tests/dse/test_warm_resume.py) while the
+budget is charged only the *increment*: a config promoted through the
+whole ladder costs its final virtual time, not the sum of every rung's
+replay (DSE.md "Warm-state promotions").  Rung states persist through
+``repro.ckpt`` via :func:`~repro.dse.search.warm.save_search` /
+:func:`~repro.dse.search.warm.load_search`, so a resumed search never
+re-pays completed rungs either.
 """
 from __future__ import annotations
 
+import json
 import math
-from typing import Mapping
+from typing import Mapping, Sequence
 
+from ..runner import LaneStates, ResumeHandle
 from ..sweep import SweepSpec
 from .driver import Objective, SearchDriver, SearchState
 
@@ -69,7 +86,16 @@ class SuccessiveHalving(SearchDriver):
     ``rungs``) + ``eta`` (:func:`horizon_ladder`); each promotion keeps
     the top ``ceil(n / eta)`` of a rung.  ``brackets`` staggers
     Hyperband-style brackets (see module docstring).  ``cycle_budget``
-    optionally hard-caps the simulated-cycle spend.
+    optionally hard-caps the simulated-cycle spend; ``bracket_budgets``
+    additionally caps each bracket's *own* spend — ``"equal"`` splits
+    ``cycle_budget`` evenly, or pass one explicit cap per bracket — so
+    one expensive bracket can never starve its siblings.  Every bracket
+    tracks its spend (``"spent"`` in the driver pocket) either way.
+
+    ``warm=True`` (default) promotes by state-resume instead of replay
+    (module docstring); ``warm=False`` restores the replay-from-zero
+    behavior exactly (useful for A/B budget accounting, and for JSON-
+    only resumes that cannot carry rung states).
     """
 
     def __init__(self, pool, objective: str | Mapping | Objective, *,
@@ -77,6 +103,8 @@ class SuccessiveHalving(SearchDriver):
                  rungs: int | None = None, eta: int = 3,
                  n_init: int | None = None, brackets: int = 1,
                  seed: int = 0, cycle_budget: float | None = None,
+                 bracket_budgets: Sequence[float] | str | None = None,
+                 warm: bool = True,
                  state: SearchState | None = None):
         super().__init__(objective, seed=seed, cycle_budget=cycle_budget,
                          state=state)
@@ -86,44 +114,100 @@ class SuccessiveHalving(SearchDriver):
         points = [dict(p) for p in pool]
         assert points, "empty candidate pool"
         self.eta = int(eta)
+        self.warm = bool(warm)
+        self._handle_store: dict[str, ResumeHandle] = {}
         self.horizons = horizon_ladder(max_horizon, min_horizon, self.eta,
                                        rungs)
         n_brackets = max(1, min(int(brackets), len(self.horizons),
                                 len(points)))
         if not self.state.driver:        # fresh search (not a resume)
             self.state.driver = {"brackets": [
-                {"rung": b, "alive": points[b::n_brackets]}
+                {"rung": b, "alive": points[b::n_brackets],
+                 "spent": 0.0, "budget": None}
                 for b in range(n_brackets)]}
+        brs = self.state.driver["brackets"]
+        if bracket_budgets is not None:
+            if bracket_budgets == "equal":
+                assert cycle_budget, \
+                    "bracket_budgets='equal' needs a cycle_budget to split"
+                caps = [float(cycle_budget) / len(brs)] * len(brs)
+            else:
+                caps = [float(c) for c in bracket_budgets]
+                assert len(caps) == len(brs), (
+                    f"{len(caps)} bracket budgets for {len(brs)} brackets")
+            for br, cap in zip(brs, caps):
+                br["budget"] = cap
 
     # ------------------------------------------------------------------
     @property
     def max_horizon(self) -> float:
         return self.horizons[-1]
 
+    @property
+    def wants_states(self) -> bool:
+        return self.warm            # rung-end states feed the promotions
+
+    def adopt_handles(self, handles: Mapping[str, ResumeHandle]) -> None:
+        """Install rung-end resume handles restored from a checkpoint
+        (:func:`~repro.dse.search.warm.load_search`): the resumed search
+        continues warm instead of replaying its current rungs from
+        cycle 0.  Without this, a JSON-only ``state=`` resume still
+        produces identical rows — it just re-pays the replay cycles."""
+        self._handle_store = dict(handles)
+
+    @staticmethod
+    def _hkey(bi: int, point: Mapping) -> str:
+        """Handle-store key: bracket index + canonical point JSON (two
+        brackets may carry the same point at different rungs)."""
+        return f"{bi}|{json.dumps(point, sort_keys=True)}"
+
+    @staticmethod
+    def _bracket_live(br: dict) -> bool:
+        cap = br.get("budget")
+        return bool(br["alive"]) and (cap is None
+                                      or br.get("spent", 0.0) < cap)
+
     def _live_brackets(self) -> list[dict]:
         return [br for br in self.state.driver["brackets"]
-                if br["alive"] and br["rung"] < len(self.horizons)]
+                if self._bracket_live(br)
+                and br["rung"] < len(self.horizons)]
 
     def _done(self) -> bool:
         return not self._live_brackets()
 
     def _ask(self):
-        points, horizons = [], []
+        points, horizons, handles = [], [], []
         segments = []
-        for br in self._live_brackets():
+        for bi, br in enumerate(self.state.driver["brackets"]):
+            if not (self._bracket_live(br)
+                    and br["rung"] < len(self.horizons)):
+                continue
             u = self.horizons[br["rung"]]
-            points += [dict(p) for p in br["alive"]]
-            horizons += [u] * len(br["alive"])
-            segments.append((br, len(br["alive"])))
+            for p in br["alive"]:
+                points.append(dict(p))
+                horizons.append(u)
+                handles.append(self._handle_store.get(self._hkey(bi, p))
+                               if self.warm else None)
+            segments.append((bi, br, len(br["alive"])))
         self._segments = segments
-        return points, horizons
+        return points, horizons, handles
 
-    def _tell(self, points, horizons, rows) -> None:
+    def _tell(self, points, horizons, rows,
+              states: LaneStates | None = None) -> None:
         lo = 0
-        for br, n in self._segments:
+        for bi, br, n in self._segments:
             seg = list(rows[lo:lo + n])
             seg_points = [dict(p) for p in points[lo:lo + n]]
-            lo += n
+            if self._costs is not None:   # per-bracket spend tracking
+                br["spent"] = float(br.get("spent", 0.0)
+                                    + sum(self._costs[lo:lo + n]))
+            if self.warm:
+                # this rung's handles are consumed: promoted points get
+                # fresh rung-end states below, dropped points never run
+                pref = f"{bi}|"
+                for k in [k for k in self._handle_store
+                          if k.startswith(pref)]:
+                    del self._handle_store[k]
             last_rung = br["rung"] >= len(self.horizons) - 1
             if last_rung:
                 br["alive"] = []         # final rung: recorded, retired
@@ -131,5 +215,12 @@ class SuccessiveHalving(SearchDriver):
                 keep = max(1, math.ceil(n / self.eta))
                 order = self.objective.order(seg)
                 br["alive"] = [seg_points[i] for i in order[:keep]]
+                if self.warm and states is not None:
+                    for i in order[:keep]:
+                        gi = lo + i
+                        self._handle_store[
+                            self._hkey(bi, seg_points[i])] = \
+                            states.handle(gi, horizons[gi])
             br["rung"] += 1
+            lo += n
         self._segments = None

@@ -1,0 +1,87 @@
+"""Rung checkpoints: persist a warm search — trajectory *and* rung-end
+states — through :mod:`repro.ckpt`.
+
+:class:`~repro.dse.search.driver.SearchState` alone is JSON and resumes
+the *decisions* of a search exactly, but a warm
+:class:`~repro.dse.search.halving.SuccessiveHalving` also carries live
+:class:`~repro.dse.runner.ResumeHandle`\\ s — the frozen ``SimState`` of
+every promoted config.  Dropping them on resume is correct but wasteful:
+the first post-resume round replays its rungs from cycle 0.  This module
+writes both through the fault-tolerant checkpoint layer (atomic npz +
+manifest, exact dtype round-trip — bool masks, integer clocks and
+weakly-typed scalars come back bit-identical, ``tests/ckpt``):
+
+* :func:`save_search` — one checkpoint step per search round: each
+  handle's state leaves in the npz shard, handle metadata (frozen time /
+  horizon / epochs) and the ``SearchState`` JSON in the manifest.
+* :func:`load_search` — the reverse: ``(SearchState, handles)``;
+  rebuild the driver with ``state=`` and hand it the handles via
+  :meth:`~repro.dse.search.halving.SuccessiveHalving.adopt_handles`.
+
+A search resumed this way is **bit-identical** to the uninterrupted one
+— same rows, same promotions, same cumulative budget — because the
+handles make the post-resume rounds charge the same increments
+(tests/dse/test_warm_resume.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from repro.ckpt import list_steps, save_checkpoint
+
+from ..runner import ResumeHandle
+from .driver import SearchState
+
+
+def save_search(path: str, driver, step: int | None = None) -> str:
+    """Checkpoint ``driver`` under ``path``: rung-end handle states plus
+    the serialized :class:`SearchState`.  ``step`` defaults to the
+    driver's round counter (one checkpoint per completed round — a
+    valid snapshot point).  Returns the written step directory."""
+    store: dict = getattr(driver, "_handle_store", {}) or {}
+    tree = {k: list(jax.tree.leaves(h.state)) for k, h in store.items()}
+    meta = {k: {"time": float(h.time), "until": float(h.until),
+                "epochs": int(h.epochs)} for k, h in store.items()}
+    step = int(driver.state.round) if step is None else int(step)
+    os.makedirs(path, exist_ok=True)
+    return save_checkpoint(path, {"handles": tree}, step,
+                           extra={"search_state": driver.state.to_json(),
+                                  "handles": meta})
+
+
+def load_search(path: str, template_state,
+                step: int | None = None
+                ) -> tuple[SearchState, dict[str, ResumeHandle]]:
+    """Restore ``(SearchState, handles)`` from :func:`save_search`.
+
+    ``template_state`` is any :class:`~repro.core.SimState` of the
+    searched simulation (e.g. the build function's fresh state) — it
+    supplies the tree structure and exact leaf dtypes the stored handle
+    states are restored into.  Handle keys are unknown before the
+    manifest is read, so the restore template is assembled from it.
+    """
+    from repro.ckpt import restore_checkpoint
+
+    steps = list_steps(path)
+    if not steps:
+        raise FileNotFoundError(f"no search checkpoints under {path}")
+    step = steps[-1] if step is None else step
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    meta = manifest["extra"]["handles"]
+    leaves_t = jax.tree.leaves(template_state)
+    treedef = jax.tree.structure(template_state)
+    template = {"handles": {k: list(leaves_t) for k in meta}}
+    tree, manifest = restore_checkpoint(path, template, step)
+    handles = {}
+    for k, m in meta.items():
+        st = jax.tree.unflatten(treedef, tree["handles"][k])
+        handles[k] = ResumeHandle(state=st, time=float(m["time"]),
+                                  until=float(m["until"]),
+                                  epochs=int(m["epochs"]))
+    state = SearchState.from_json(manifest["extra"]["search_state"])
+    return state, handles

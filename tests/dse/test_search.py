@@ -78,9 +78,12 @@ def test_successive_halving_finds_exhaustive_optimum_cheaper(ctx):
     assert res.best["until"] == MAX_H             # ...at the full horizon
     assert res.budget < exhaustive_budget         # ...for less spend
     assert len(res.rows) < 3 * len(pool)          # and far fewer trials
-    # budget accounting matches the recorded trials exactly
-    assert res.budget == pytest.approx(
-        sum(t["virtual_time"] for t in res.rows))
+    # budget accounting matches the recorded trials exactly: each trial
+    # records its newly simulated cycles, and warm promotion makes the
+    # total strictly less than the sum of trial virtual times (promoted
+    # configs no longer replay their earlier rungs)
+    assert res.budget == pytest.approx(sum(t["cycles"] for t in res.rows))
+    assert res.budget < sum(t["virtual_time"] for t in res.rows)
     # promotion shrinks rung populations by ~eta
     per_round = {}
     for t in res.rows:
@@ -99,15 +102,22 @@ def test_search_is_bit_reproducible_per_seed(ctx):
 
 
 def test_search_state_resumes_identical_trajectory(ctx):
+    """JSON-only resume: with replay promotion (warm=False) the bare
+    ``SearchState`` string is the whole search — resuming from any round
+    boundary replays the identical trajectory *and* budget.  (A warm
+    search resumed from JSON alone also produces identical rows but
+    re-pays its current rungs; carrying the rung states across a resume
+    needs the checkpoint path — tests/dse/test_warm_resume.py.)"""
     bf, sim, extract, pool, _ = ctx
     snaps = []
-    full = run_search(bf, _sh(pool), extract=extract,
+    full = run_search(bf, _sh(pool, warm=False), extract=extract,
                       callback=lambda d: snaps.append(d.state.to_json()))
     assert len(snaps) == full.rounds
     for k in range(len(snaps) - 1):       # resume from every boundary
         state = SearchState.from_json(snaps[k])
         assert state.round == k + 1
-        resumed = run_search(bf, _sh(pool, state=state), extract=extract)
+        resumed = run_search(bf, _sh(pool, warm=False, state=state),
+                             extract=extract)
         assert resumed.rows == full.rows
         assert resumed.best == full.best
         assert resumed.budget == full.budget
@@ -256,7 +266,7 @@ def test_trial_cycles_nan_virtual_time_falls_back_to_horizon():
     assert drv.done                                   # the cap still arms
 
 
-@pytest.mark.parametrize("acq", ["ts", "ucb"])
+@pytest.mark.parametrize("acq", ["ts", "ucb", "qei"])
 def test_batch_bo_proposes_distinct_points_on_small_choice_spaces(acq):
     """Duplicate pool candidates tie on every acquisition value — every
     batch (warmup and model rounds alike) must be distinct design
@@ -278,6 +288,63 @@ def test_batch_bo_proposes_distinct_points_on_small_choice_spaces(acq):
                  for p in pts])
     # never re-proposed across rounds, and covered the whole space
     assert len(set(proposed)) == len(proposed) == 12
+
+
+def test_qei_batch_diversity_beats_naive_topk_thompson():
+    """qEI's constant liar must spread a batched ask: after one warmup
+    round on real memsys-grid objectives, the qEI batch's mean pairwise
+    distance (in the surrogate's unit cube) beats the *naive top-k* of
+    a single Thompson draw — k best indices of one posterior sample,
+    which cluster around that draw's minimum basin."""
+    axes = {"conn_latency[-1]": [float(v) for v in range(6, 38, 2)],
+            "kind.l1.extra_hit_rate": [0.0, 0.2, 0.4, 0.6, 0.8]}
+    grid = SweepSpec.grid(axes)
+    bf = memoize_build(lambda: build(n_cores=3, pattern="mixed", n_reqs=6,
+                                     donate=True))
+    rows = run_sweep(bf, grid, until=400.0)
+    table = {(r["conn_latency[-1]"], r["kind.l1.extra_hit_rate"]):
+             r["virtual_time"] for r in rows}
+
+    def f(p):
+        return table[(p["conn_latency[-1]"], p["kind.l1.extra_hit_rate"])]
+
+    def warmed(acq):
+        bo = BatchBO(axes, "virtual_time", horizon=400.0, batch=6,
+                     rounds=2, pool=256, seed=0, acquisition=acq)
+        pts, us = bo.ask()                      # random warmup round
+        bo.tell([{**p, "virtual_time": f(p)} for p in pts])
+        return bo
+
+    def spread(bo, pts):
+        x = bo._encode(pts)
+        d = np.sqrt(((x[:, None] - x[None, :]) ** 2).sum(-1))
+        n = len(pts)
+        return float(d.sum() / (n * (n - 1)))
+
+    qei = warmed("qei")
+    qei_pts, _ = qei.ask()
+
+    # the naive baseline from the *identical* surrogate state: one joint
+    # Thompson draw over the same candidate pool, take its k best
+    ref = warmed("ts")
+    hist = ref.state.history
+    seen = {ref._key(t) for t in hist}
+    cand = []
+    for p in SweepSpec.random(axes, ref.pool, seed=ref._draw_seed()):
+        k = ref._key(p)
+        if k not in seen:
+            seen.add(k)
+            cand.append(p)
+    x = ref._encode(hist)
+    y = np.asarray([float(t["virtual_time"]) for t in hist], np.float64)
+    yn = (y - y.mean()) / (y.std() or 1.0)
+    mean, cov = ref._posterior(x, yn, ref._encode(cand))
+    low = np.linalg.cholesky(cov + 1e-9 * np.eye(len(cand)))
+    draw = mean + low @ np.random.default_rng(0).standard_normal(len(cand))
+    naive = [dict(cand[i]) for i in np.argsort(draw, kind="stable")[:6]]
+
+    assert len(qei_pts) == len(naive) == 6
+    assert spread(qei, qei_pts) > spread(ref, naive)
 
 
 def test_objective_front_uses_pareto():

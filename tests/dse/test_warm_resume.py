@@ -1,0 +1,233 @@
+"""Warm-state resume (DSE.md "Warm-state promotions"): the invariants
+that make state-resumed rung promotion trustworthy:
+
+* **bit-identity** — a lane resumed from its frozen rung-k state and run
+  to horizon H produces the same row *and the same final state* as a
+  cold run to H, on every memsys pattern and on masked topology-family
+  lanes (the engine's epoch sequence is state-determined; ``until`` is
+  an absolute traced operand);
+* the resumed path retraces nothing (same batched executables);
+* a warm `SuccessiveHalving` search produces the identical trajectory
+  as a replay-from-zero (``warm=False``) search while charging only the
+  horizon increments to the budget;
+* a search interrupted mid-ladder and resumed through `repro.ckpt` rung
+  checkpoints (`save_search` / `load_search`) is bit-identical to the
+  uninterrupted one — rows, promotions and cumulative budget;
+* Hyperband per-bracket budget caps stop an exhausted bracket without
+  touching its siblings.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.dse import (ResumeHandle, SuccessiveHalving, SweepSpec,
+                       load_search, memoize_build, run_search, run_sweep,
+                       runner_for, save_search)
+from repro.sims.memsys import build, build_family
+
+PATTERNS = ["compute", "stream", "pointer", "idle_half", "mixed"]
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# run_sweep-level bit-identity: resume == cold, rows and final states
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_resumed_rows_bit_identical_all_patterns(pattern):
+    bf = memoize_build(
+        lambda pattern=pattern: build(n_cores=3, pattern=pattern,
+                                      n_reqs=6, donate=True))
+    pts = [{"conn_latency[-1]": float(v)} for v in (10, 25, 40)]
+    spec = SweepSpec.explicit(pts)
+    u1, u2 = 250.0, 1000.0
+    _, mid = run_sweep(bf, spec, until=u1, return_states=True)
+    handles = [mid.handle(i, u1) for i in range(len(pts))]
+    warm_rows, ws = run_sweep(bf, spec, until=u2, resume=handles,
+                              return_states=True)
+    cold_rows, cs = run_sweep(bf, spec, until=u2, return_states=True)
+    assert warm_rows == cold_rows
+    for i in range(len(pts)):
+        _assert_tree_equal(ws.state(i), cs.state(i))
+
+
+def test_family_masked_lane_warm_resume_bit_identical():
+    """shape.* lanes resume exactly like plain lanes: the frozen state
+    carries the mask pinning (inactive next_tick stays +inf), so a
+    resumed masked lane equals a cold masked run at the longer
+    horizon."""
+    bf = memoize_build(
+        lambda shape=None: build_family(shape=shape, pattern="mixed",
+                                        n_reqs=6, donate=True))
+    pts = [{"shape.core": c, "conn_latency[-1]": u}
+           for c, u in ((1, 10.0), (2, 25.0), (3, 40.0), (2, 40.0))]
+    spec = SweepSpec.explicit(pts)
+    u1, u2 = 250.0, 1000.0
+    _, mid = run_sweep(bf, spec, until=u1, return_states=True)
+    handles = [mid.handle(i, u1) for i in range(len(pts))]
+    warm_rows, ws = run_sweep(bf, spec, until=u2, resume=handles,
+                              return_states=True)
+    cold_rows, cs = run_sweep(bf, spec, until=u2, return_states=True)
+    assert warm_rows == cold_rows
+    for i in range(len(pts)):
+        _assert_tree_equal(ws.state(i), cs.state(i))
+
+
+def test_partial_resume_mixes_warm_and_cold_lanes():
+    """resume= may hand only some lanes a handle — handled lanes
+    continue, the rest start cold, in one stacked batch."""
+    bf = memoize_build(lambda: build(n_cores=3, pattern="mixed", n_reqs=6,
+                                     donate=True))
+    pts = [{"conn_latency[-1]": float(v)} for v in (10, 25, 40)]
+    spec = SweepSpec.explicit(pts)
+    u1, u2 = 250.0, 1000.0
+    _, mid = run_sweep(bf, spec, until=u1, return_states=True)
+    handles = [mid.handle(0, u1), None, mid.handle(2, u1)]
+    warm_rows = run_sweep(bf, spec, until=u2, resume=handles)
+    cold_rows = run_sweep(bf, spec, until=u2)
+    assert warm_rows == cold_rows
+
+
+def test_resume_handle_length_mismatch_raises():
+    bf = memoize_build(lambda: build(n_cores=2, pattern="mixed", n_reqs=4,
+                                     donate=True))
+    spec = SweepSpec.explicit([{"conn_latency[-1]": 10.0}] * 2)
+    with pytest.raises(ValueError, match="one handle"):
+        run_sweep(bf, spec, until=100.0, resume=[None])
+
+
+def test_resumed_path_retraces_nothing():
+    """Resuming re-enters the same compiled executables: ``until`` and
+    ``max_epochs`` are traced operands and per-lane initial states stack
+    outside the jit, so the warm path costs zero retraces."""
+    bf = memoize_build(lambda: build(n_cores=3, pattern="mixed", n_reqs=6,
+                                     donate=True))
+    sim, _ = bf()
+    pts = [{"conn_latency[-1]": float(v)} for v in (10, 20, 30, 40)]
+    spec = SweepSpec.explicit(pts)
+    _, mid = run_sweep(bf, spec, until=250.0, return_states=True)
+    runner = runner_for(sim)
+    t0 = runner.trace_count
+    handles = [mid.handle(i, 250.0) for i in range(len(pts))]
+    run_sweep(bf, spec, until=1000.0, resume=handles)
+    assert runner.trace_count == t0, (
+        f"{runner.trace_count - t0} retraces on the resumed path")
+
+
+# ---------------------------------------------------------------------------
+# search-level: warm == cold trajectories, incremental budget, ckpt resume
+# ---------------------------------------------------------------------------
+POOL = [{"conn_latency[-1]": float(v)} for v in range(6, 42, 4)]
+LADDER = dict(max_horizon=2000.0, min_horizon=2000.0 / 9, eta=3, seed=0)
+
+
+def _bf():
+    return memoize_build(lambda: build(n_cores=3, pattern="mixed",
+                                       n_reqs=8, donate=True))
+
+
+def test_warm_search_matches_cold_rows_for_less_budget():
+    bf = _bf()
+    cold = run_search(bf, SuccessiveHalving(POOL, "virtual_time",
+                                            warm=False, **LADDER))
+    warm = run_search(bf, SuccessiveHalving(POOL, "virtual_time",
+                                            warm=True, **LADDER))
+    strip = lambda rows: [{k: v for k, v in r.items() if k != "cycles"}
+                          for r in rows]
+    assert strip(warm.rows) == strip(cold.rows)   # identical trajectory
+    assert warm.best == {**cold.best, "cycles": warm.best["cycles"]}
+    assert warm.budget < cold.budget              # ...for increments only
+    # cold charges each trial its full virtual time; warm's total is the
+    # cold total minus every promoted prefix (telescoping sums)
+    assert cold.budget == pytest.approx(
+        sum(t["virtual_time"] for t in cold.rows))
+    assert warm.budget == pytest.approx(
+        sum(t["cycles"] for t in warm.rows))
+
+
+def test_ckpt_resume_mid_ladder_bit_identical(tmp_path):
+    """Interrupt a warm search at every round boundary, persist it with
+    save_search (rung states through repro.ckpt), restore with
+    load_search + adopt_handles: rows, best and *budget* all match the
+    uninterrupted search exactly — completed rungs are never re-paid."""
+    bf = _bf()
+    _, st_t = bf()
+    snaps = []
+
+    def cb(drv):
+        snaps.append(save_search(str(tmp_path / f"r{drv.state.round}"),
+                                 drv))
+
+    full = run_search(bf, SuccessiveHalving(POOL, "virtual_time",
+                                            **LADDER), callback=cb)
+    assert len(snaps) == full.rounds
+    for k in range(full.rounds - 1):      # resume from every boundary
+        state, handles = load_search(str(tmp_path / f"r{k + 1}"), st_t)
+        drv = SuccessiveHalving(POOL, "virtual_time", **LADDER,
+                                state=state)
+        drv.adopt_handles(handles)
+        assert all(isinstance(h, ResumeHandle) for h in handles.values())
+        resumed = run_search(bf, drv)
+        assert resumed.rows == full.rows
+        assert resumed.best == full.best
+        assert resumed.budget == full.budget
+        assert resumed.rounds == full.rounds - (k + 1)
+    # the rung checkpoints themselves are small, real files
+    step0 = snaps[0]
+    assert os.path.isfile(os.path.join(step0, "arrays.npz"))
+    assert os.path.isfile(os.path.join(step0, "manifest.json"))
+
+
+def test_warm_search_repeat_retraces_nothing():
+    bf = _bf()
+    sim, _ = bf()
+    run_search(bf, SuccessiveHalving(POOL, "virtual_time", **LADDER))
+    runner = runner_for(sim)
+    t0 = runner.trace_count
+    res = run_search(bf, SuccessiveHalving(POOL, "virtual_time", **LADDER))
+    assert runner.trace_count == t0, (
+        f"{runner.trace_count - t0} retraces in a repeat warm search")
+    assert res.best is not None
+
+
+# ---------------------------------------------------------------------------
+# Hyperband per-bracket budget caps
+# ---------------------------------------------------------------------------
+def test_bracket_budget_caps_stop_only_the_exhausted_bracket():
+    bf = _bf()
+    free = run_search(bf, SuccessiveHalving(POOL, "virtual_time",
+                                            brackets=2, **LADDER))
+    spent = [br["spent"]
+             for br in free.state.driver["brackets"]]
+    assert all(s > 0 for s in spent)      # every bracket tracks its spend
+    assert sum(spent) == pytest.approx(free.budget)
+    # cap bracket 0 below its free-running spend; bracket 1 runs free
+    caps = [spent[0] * 0.5, float("inf")]
+    capped = run_search(bf, SuccessiveHalving(
+        POOL, "virtual_time", brackets=2, bracket_budgets=caps, **LADDER))
+    brs = capped.state.driver["brackets"]
+    assert brs[0]["spent"] < spent[0]     # bracket 0 stopped early
+    assert brs[0]["alive"]                # ...mid-ladder, not drained
+    assert brs[1]["spent"] == pytest.approx(spent[1])   # sibling untouched
+    assert capped.best is not None
+
+
+def test_bracket_budgets_equal_split_and_validation():
+    drv = SuccessiveHalving(POOL, "virtual_time", brackets=2,
+                            cycle_budget=1000.0, bracket_budgets="equal",
+                            **{k: v for k, v in LADDER.items()})
+    caps = [br["budget"] for br in drv.state.driver["brackets"]]
+    assert caps == [500.0, 500.0]
+    with pytest.raises(AssertionError, match="bracket budgets"):
+        SuccessiveHalving(POOL, "virtual_time", brackets=2,
+                          bracket_budgets=[1.0], **LADDER)
+    with pytest.raises(AssertionError, match="cycle_budget"):
+        SuccessiveHalving(POOL, "virtual_time", brackets=2,
+                          bracket_budgets="equal", **LADDER)

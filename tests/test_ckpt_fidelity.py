@@ -1,0 +1,148 @@
+"""Round-trip fidelity of `repro.ckpt` (property-style, seeded).
+
+Rung checkpoints of warm searches flow whole `SimState` trees through
+`save_checkpoint` / `restore_checkpoint`, so the round trip must be
+*exact* for every leaf kind the engine uses: bool masks, integer clocks
+(including 64-bit counters with x64 disabled — `jnp.asarray` before the
+dtype fixup used to silently truncate them), weakly-typed scalars,
+floats and empty arrays.  The tests run a seeded dtype x shape grid and
+randomly composed nested trees instead of `hypothesis` (which the
+container does not ship); the generators are deterministic per seed.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import restore_checkpoint, save_checkpoint
+from repro.sims.memsys import build
+
+DTYPES = [np.bool_, np.int8, np.int16, np.int32, np.int64, np.uint8,
+          np.uint16, np.uint32, np.uint64, np.float16, np.float32,
+          np.float64, np.complex64]
+SHAPES = [(), (1,), (5,), (2, 3), (2, 0), (1, 2, 3)]
+
+
+def _rand(rng, dt, shape):
+    dt = np.dtype(dt)
+    if dt == np.bool_:
+        return rng.integers(0, 2, size=shape).astype(bool)
+    if dt.kind in "iu":
+        info = np.iinfo(dt)
+        # extreme values included: truncation bugs hide at the edges
+        a = rng.integers(info.min, info.max, size=shape, dtype=dt,
+                         endpoint=True)
+        return a
+    if dt.kind == "c":
+        return (rng.standard_normal(shape)
+                + 1j * rng.standard_normal(shape)).astype(dt)
+    if dt == np.float64:
+        # values a float32 round-trip would corrupt
+        return rng.standard_normal(shape) * (1.0 + 1e-12) + 1e-9
+    return rng.standard_normal(shape).astype(dt)
+
+
+@pytest.mark.parametrize("dt", DTYPES, ids=lambda d: np.dtype(d).name)
+def test_roundtrip_exact_per_dtype(tmp_path, dt):
+    rng = np.random.default_rng(abs(hash(np.dtype(dt).name)) % 2**32)
+    tree = {f"s{i}": _rand(rng, dt, s) for i, s in enumerate(SHAPES)}
+    save_checkpoint(str(tmp_path), tree, 0)
+    back, _ = restore_checkpoint(str(tmp_path), tree)
+    for k, want in tree.items():
+        got = np.asarray(back[k])
+        assert got.dtype == want.dtype, (k, got.dtype, want.dtype)
+        assert got.shape == want.shape, (k, got.shape, want.shape)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_roundtrip_exact_random_nested_trees(tmp_path, seed):
+    """Property-style: randomly composed nested dict/list/tuple trees of
+    random dtype/shape leaves round-trip leaf-for-leaf, bit-for-bit."""
+    rng = np.random.default_rng(seed)
+
+    def gen(depth):
+        if depth == 0 or rng.random() < 0.4:
+            dt = DTYPES[int(rng.integers(len(DTYPES)))]
+            shape = SHAPES[int(rng.integers(len(SHAPES)))]
+            return _rand(rng, dt, shape)
+        kind = rng.random()
+        n = int(rng.integers(1, 4))
+        if kind < 0.5:
+            return {f"k{i}": gen(depth - 1) for i in range(n)}
+        if kind < 0.75:
+            return [gen(depth - 1) for _ in range(n)]
+        return tuple(gen(depth - 1) for _ in range(n))
+
+    tree = {"root": gen(3)}
+    save_checkpoint(str(tmp_path), tree, 0)
+    back, _ = restore_checkpoint(str(tmp_path), tree)
+    la, lb = jax.tree.leaves(tree), jax.tree.leaves(back)
+    assert len(la) == len(lb)
+    for want, got in zip(la, lb):
+        got = np.asarray(got)
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+
+
+def test_int64_counters_survive_with_x64_disabled(tmp_path):
+    """The regression the warm-search rung checkpoints exposed: a
+    64-bit leaf restored through `jnp.asarray` with x64 off was
+    truncated to 32 bits *before* the dtype fixup — values beyond
+    2**31 / float32 precision came back corrupted."""
+    assert not jax.config.jax_enable_x64       # the setup this pins
+    tree = {"clock": np.asarray([2**40 + 7, -(2**35)], np.int64),
+            "t": np.asarray([1.0 + 2**-40], np.float64),
+            "u": np.asarray([2**63 - 1], np.uint64)}
+    save_checkpoint(str(tmp_path), tree, 0)
+    back, _ = restore_checkpoint(str(tmp_path), tree)
+    for k, want in tree.items():
+        got = np.asarray(back[k])
+        assert got.dtype == want.dtype, (k, got.dtype)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_simstate_leaves_roundtrip_bit_exact(tmp_path):
+    """A real evolved SimState — bool masks, integer clocks, f32 times,
+    weakly-typed scalars — through the exact tree shape the warm-search
+    rung checkpoints use ({key: [leaves...]})."""
+    sim, st = build(n_cores=3, pattern="mixed", n_reqs=6, donate=False)
+    out = sim.run(sim.copy_state(st), 400.0)
+    leaves = jax.tree.leaves(out)
+    kinds = {np.asarray(x).dtype.kind for x in leaves}
+    assert "f" in kinds and "i" in kinds       # the mix that matters
+    tree = {"handles": {"0|{}": list(leaves)}}
+    save_checkpoint(str(tmp_path), tree, 3)
+    back, manifest = restore_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 3
+    got = back["handles"]["0|{}"]
+    assert len(got) == len(leaves)
+    for want, g in zip(leaves, got):
+        w = np.asarray(want)
+        g = np.asarray(g)
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(g, w)
+    # the restored leaves rebuild a usable state: same treedef, and the
+    # engine continues it exactly as it continues the original
+    treedef = jax.tree.structure(out)
+    rebuilt = jax.tree.unflatten(treedef, got)
+    a = sim.run(jax.tree.map(jnp.asarray, rebuilt), 800.0)
+    b = sim.run(sim.copy_state(out), 800.0)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_nonfinite_and_extreme_floats_roundtrip(tmp_path):
+    """Engine states carry +inf next-event times; NaN and denormals must
+    also survive (array_equal treats NaN positions as equal here)."""
+    tree = {"x": np.asarray([np.inf, -np.inf, np.nan, 0.0, -0.0,
+                             np.finfo(np.float32).tiny,
+                             math.pi], np.float32)}
+    save_checkpoint(str(tmp_path), tree, 0)
+    back, _ = restore_checkpoint(str(tmp_path), tree)
+    got = np.asarray(back["x"])
+    assert got.dtype == np.float32
+    np.testing.assert_array_equal(got, tree["x"])
+    assert np.signbit(got[4])                  # -0.0 keeps its sign bit
