@@ -8,7 +8,23 @@ rendered offline with no external dependencies.
 """
 from __future__ import annotations
 
+import html
 import json
+
+
+def _embed_json(obj) -> str:
+    """JSON for embedding inside a ``<script>`` block.
+
+    A task whose ``category``/``action``/``location`` contains
+    ``</script>`` (or any markup) would otherwise terminate the script
+    element mid-JSON and break — or script-inject — the page.  Escaping
+    ``<``, ``>`` and ``&`` to ``\\uXXXX`` keeps the payload valid JSON
+    *and* inert HTML (the canonical safe-embedding trick).
+    """
+    return (json.dumps(obj)
+            .replace("&", "\\u0026")
+            .replace("<", "\\u003c")
+            .replace(">", "\\u003e"))
 
 _TEMPLATE = """<!DOCTYPE html>
 <html><head><meta charset="utf-8"><title>Daisen-lite trace</title>
@@ -73,10 +89,13 @@ def export_html(tasks, out_path: str, title: str = "simulation trace"):
                  action=t.action, location=t.location, start=t.start,
                  end=t.end if t.end is not None else t.start, tags=t.tags)
             for t in tasks]
-    html = (_TEMPLATE.replace("__TASKS__", json.dumps(rows))
-            .replace("__TITLE__", title))
+    # positional substitution: sequential .replace() would let a task
+    # string containing the literal placeholder text corrupt the page
+    head, rest = _TEMPLATE.split("__TITLE__")
+    mid, tail = rest.split("__TASKS__")
+    doc = head + html.escape(title) + mid + _embed_json(rows) + tail
     with open(out_path, "w") as fh:
-        fh.write(html)
+        fh.write(doc)
     return out_path
 
 

@@ -23,10 +23,59 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
+
+
+class _Server(ThreadingHTTPServer):
+    # SSE clients (repro.obs.dashboard) hold their handler thread open
+    # for the stream's lifetime; shutdown must not wait on them.
+    daemon_threads = True
+    block_on_close = False
+
+
+class HttpEndpoint:
+    """A stdlib threaded HTTP server with ephemeral-port fallback and a
+    clean ``shutdown()`` — the serving half shared by :class:`Monitor`
+    (AkitaRTM-lite) and the campaign dashboard
+    (:mod:`repro.obs.dashboard`).
+
+    ``port`` is a *request*: when it is already bound (two monitored
+    sims in one CI job, a stale server from a previous run) the endpoint
+    falls back to an OS-assigned ephemeral port instead of crashing the
+    simulation it is observing.  The actually-bound port is on
+    ``self.port``; callers report it instead of assuming.
+    """
+
+    def __init__(self, handler_cls, port: int = 0,
+                 host: str = "127.0.0.1"):
+        try:
+            self.httpd = _Server((host, int(port)), handler_cls)
+        except OSError:
+            if int(port) == 0:
+                raise               # ephemeral bind failing is terminal
+            self.httpd = _Server((host, 0), handler_cls)
+        self.host = host
+        self.port = int(self.httpd.server_address[1])
+        self.requested_port = int(port)
+        self._thread = threading.Thread(target=self.httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def shutdown(self) -> None:
+        """Stop serving and release the socket (idempotent)."""
+        if self.httpd is not None:
+            self.httpd.shutdown()
+            self.httpd.server_close()
+            self._thread.join(timeout=5)
+            self.httpd = None
 
 
 class Monitor:
@@ -36,7 +85,8 @@ class Monitor:
         self.domain = domain
         self.history: list[dict] = []
         self._bn_cache: list[dict] = []
-        self._httpd = None
+        self._httpd: HttpEndpoint | None = None
+        self.http_port: int | None = None
         if http_port is not None:
             self._serve(http_port)
 
@@ -144,8 +194,12 @@ class Monitor:
 
     # ------------------------------------------------------------------
     def _serve(self, port: int):
-        """Optional stdlib HTTP endpoint: GET /status, /bottlenecks."""
-        from http.server import BaseHTTPRequestHandler, HTTPServer
+        """Optional stdlib HTTP endpoint: GET /status, /bottlenecks.
+
+        ``port`` is a request — if it is already in use the monitor
+        serves on an ephemeral port instead of crashing; the bound port
+        is on ``self.http_port``.
+        """
         mon = self
 
         class H(BaseHTTPRequestHandler):
@@ -170,10 +224,17 @@ class Monitor:
             def log_message(self, *a):
                 pass
 
-        self._httpd = HTTPServer(("127.0.0.1", port), H)
-        threading.Thread(target=self._httpd.serve_forever,
-                         daemon=True).start()
+        self._httpd = HttpEndpoint(H, port=port)
+        self.http_port = self._httpd.port
 
-    def close(self):
-        if self._httpd:
+    def shutdown(self):
+        """Stop the HTTP endpoint and release its socket (idempotent;
+        safe to call when no endpoint was started)."""
+        if self._httpd is not None:
             self._httpd.shutdown()
+            self._httpd = None
+            self.http_port = None
+
+    # backwards-compatible alias
+    def close(self):
+        self.shutdown()

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SimParams, SimState, check_not_consumed
+from repro.obs.bus import BUS
 
 from .family import TopologyFamily
 from .schedule import ChunkSchedule, ChunkAutotuner, auto_schedule
@@ -267,9 +268,24 @@ class BatchRunner:
 
             fn = jax.jit(jax.vmap(one))
             self._fns[key] = fn
+        if not BUS.active:
+            live, ep = fn(out_b, _vec(u_vec, b, np.float32),
+                          _vec(budget_vec, b, np.int32))
+            return jax.device_get((live, ep))
+        tc0 = self.trace_count
+        t0 = time.perf_counter()
         live, ep = fn(out_b, _vec(u_vec, b, np.float32),
                       _vec(budget_vec, b, np.int32))
-        return jax.device_get((live, ep))
+        if self.trace_count > tc0:
+            BUS.emit("compile", what="liveness", b=b,
+                     n=self.trace_count - tc0,
+                     dur=time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out = jax.device_get((live, ep))
+        dt = time.perf_counter() - t0
+        BUS.emit("transfer", what="liveness", b=b, dur=dt)
+        BUS.observe("dse.transfer.liveness_s", dt)
+        return out
 
     # ------------------------------------------------------------------
     def run_batch(self, states_b: SimState, params_b: SimParams,
@@ -293,7 +309,19 @@ class BatchRunner:
         b = int(params_b.conn_latency.shape[0])
         fn = self._batched_fn(b, shard)
         u, m = _horizons(until, max_epochs, b)
-        return fn(states_b, params_b, jnp.asarray(u), jnp.asarray(m))
+        if not BUS.active:
+            return fn(states_b, params_b, jnp.asarray(u), jnp.asarray(m))
+        # telemetry: a trace_count bump across this (host-side) dispatch
+        # means XLA traced+compiled a fresh executable inside the call
+        tc0 = self.trace_count
+        t0 = time.perf_counter()
+        out = fn(states_b, params_b, jnp.asarray(u), jnp.asarray(m))
+        if self.trace_count > tc0:
+            BUS.emit("compile", what="run", b=b, shard=bool(shard),
+                     n=self.trace_count - tc0,
+                     dur=time.perf_counter() - t0)
+            BUS.count("dse.compiles", self.trace_count - tc0)
+        return out
 
     # ------------------------------------------------------------------
     def run_chunked(self, template: SimState | Sequence[SimState],
@@ -422,6 +450,11 @@ class BatchRunner:
                  if schedule.autotune else None)
         pad_template = template[0] if per_lane else template
         n_rounds = 0
+        if BUS.active:
+            BUS.emit("rounds.start", B=B, per_lane=per_lane,
+                     ladder=list(schedule.ladder),
+                     quantum=schedule.quantum, shard=bool(shard),
+                     autotune=bool(schedule.autotune))
 
         def fresh(ids):
             if per_lane:
@@ -436,6 +469,10 @@ class BatchRunner:
                 rung = tuner.next_probe(remaining)
                 if rung is None:              # probing done: pick winner
                     top = tuner.best(schedule.top)
+                    if BUS.active:
+                        BUS.emit("autotune.winner", top=top,
+                                 rates={str(r): rate for r, rate
+                                        in tuner.rates.items()})
                     schedule = schedule.narrowed(top)
                     self._tuned_top[shard] = top
                     tuner = None
@@ -464,10 +501,12 @@ class BatchRunner:
                     ids += seg_ids[:room]
                     room = 0
             n_fresh = min(room, len(pending))
+            spawned: list[int] = []
             if n_fresh:
                 take, pending = pending[:n_fresh], pending[n_fresh:]
                 parts.append(fresh(take))
                 ids += take
+                spawned = take
                 room -= n_fresh
             if room:                  # zero-horizon padding: freezes on
                 parts.append(stack_states(pad_template, room))  # entry
@@ -489,16 +528,20 @@ class BatchRunner:
             m_vec = np.where(live_row, cap, 0).astype(np.int32)
             b_vec = np.where(live_row, budget[ridx], 0).astype(np.int32)
 
+            tele = BUS.active         # snapshot once per round
             t0 = time.perf_counter()
             out = self.run_batch(sb, pb, u_vec, m_vec, shard)
             live, ep_c = self._liveness(out, u_vec, b_vec)   # host sync
             dt = time.perf_counter() - t0
 
+            round_epochs = 0
             surv_rows, surv_ids = [], []
             fin_rows, fin_ids = [], []
             for j, i in enumerate(ids):
                 if i < 0:
                     continue
+                if tele:
+                    round_epochs += int(ep_c[j]) - int(ep[i])
                 ep[i] = int(ep_c[j])
                 if live[j]:
                     surv_rows.append(j)
@@ -525,13 +568,46 @@ class BatchRunner:
                                  jax.tree.map(lambda x: x[g], out)))
             if tuner is not None:
                 tuner.record(C, dt, lanes=int(np.sum(live_row)))
+                if tele and C in tuner.rates:
+                    BUS.emit("autotune.probe", rung=C, dur=dt,
+                             lanes=int(np.sum(live_row)),
+                             rate=tuner.rates[C])
             else:
+                q0 = schedule.quantum
                 schedule.grow_quantum(dt)
+                if tele and schedule.quantum != q0:
+                    BUS.emit("quantum.grow", quantum=schedule.quantum,
+                             was=q0, round_dur=dt)
+            if tele:
+                # the per-round heartbeat: lane spawn/freeze/harvest and
+                # the compaction decision, one event per drained round
+                BUS.emit(
+                    "round.end", round=n_rounds, rung=C, dur=dt,
+                    live=int(np.sum(live_row)), fresh=len(spawned),
+                    pad=int(np.sum(~live_row)), epochs=round_epochs,
+                    finished=len(fin_ids), survivors=len(surv_ids),
+                    pending=len(pending),
+                    pool=sum(len(g) for g, _ in pool),
+                    quantum=schedule.quantum, endgame=bool(endgame),
+                    probe=rung is not None,
+                    compacted=bool(surv_rows)
+                    and len(surv_rows) != C,
+                    spawned_ids=spawned[:128],
+                    frozen_ids=fin_ids[:128])
+                BUS.count("dse.rounds")
+                BUS.count("dse.lanes_finished", len(fin_ids))
+                BUS.observe("dse.round_s", dt)
+                BUS.gauge("dse.lanes_live", len(surv_ids))
+                BUS.gauge("dse.lanes_pending", len(pending))
             n_rounds += 1
 
         self.last_rounds = {"rounds": n_rounds, "chunk": schedule.top,
                             "quantum": schedule.quantum,
                             "trace_count": self.trace_count}
+        if BUS.active:
+            BUS.emit("rounds.end", B=B, rounds=n_rounds,
+                     chunk=schedule.top, quantum=schedule.quantum,
+                     trace_count=self.trace_count)
         # final assembly in point order: concat the finished segments
         # once, then one gather per leaf restores lane order
         all_ids = np.asarray([i for ids, _ in done for i in ids], np.int32)
@@ -696,6 +772,14 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
     lane_states = LaneStates() if return_states else None
     until_arr = np.broadcast_to(np.asarray(until, np.float32), (len(spec),))
     shape_mode = spec.has_shape_axes()
+    tele = BUS.active
+    sweep_t0 = time.perf_counter()
+    if tele:
+        BUS.emit("sweep.start", n_points=len(spec), axes=spec.summary(),
+                 shape_mode=bool(shape_mode), shard=bool(shard),
+                 warm=(0 if resume is None
+                       else sum(1 for h in resume if h is not None)))
+        BUS.count("dse.sweeps")
     static_ok = _static_kwarg_names(build_fn)
     if static_ok is not None:
         bad = [a for a in spec.axes if a.startswith(STATIC_PREFIX)
@@ -704,7 +788,13 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
             raise ValueError(
                 f"invalid static axes {bad}: build function accepts "
                 f"only {sorted(static_ok)}")
+    group_no = 0
     for static_kwargs, indices, traced in spec.split_static():
+        if tele:
+            BUS.emit("sweep.group", group=group_no,
+                     static={k: str(v) for k, v in static_kwargs.items()},
+                     n_points=len(indices), family=bool(shape_mode))
+        group_no += 1
         # validate each group's own axes against that group's build (a
         # group's sim can differ structurally, e.g. static.n_cores, so
         # neither the whole-spec union nor a single target would do)
@@ -767,7 +857,14 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
         # one device_get serves both the result rows and (when asked)
         # the resumable final states — never two transfers per group
         ex = extract or default_extract
+        t0 = time.perf_counter()
         host = jax.device_get(out)
+        if tele:
+            dt = time.perf_counter() - t0
+            BUS.emit("transfer", what="rows", lanes=len(indices), dur=dt,
+                     bytes=int(sum(x.nbytes for x in jax.tree.leaves(host)
+                                   if hasattr(x, "nbytes"))))
+            BUS.observe("dse.transfer.rows_s", dt)
         group_rows = [ex(sim, lane(host, j)) for j in range(len(indices))]
         if lane_states is not None:
             lane_states.add_group(host, indices)
@@ -775,6 +872,9 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
             row = dict(spec.points[i])
             row.update(group_rows[j])
             rows[i] = row
+    if tele:
+        BUS.emit("sweep.end", n_points=len(spec), groups=group_no,
+                 dur=time.perf_counter() - sweep_t0)
     if return_states:
         return list(rows), lane_states
     return list(rows)

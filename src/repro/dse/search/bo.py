@@ -29,9 +29,12 @@ bit-reproducible and mid-search resume continues identically.
 from __future__ import annotations
 
 import math
+import time
 from typing import Mapping
 
 import numpy as np
+
+from repro.obs.bus import BUS
 
 from ..sweep import SweepSpec, parse_axis_spec
 from .driver import SearchDriver, SearchState
@@ -210,6 +213,7 @@ class BatchBO(SearchDriver):
         p = self._encode(cand)
 
         q = min(self.batch, len(cand))
+        t0 = time.perf_counter()
         if self.acquisition == "qei":
             picks = self._qei(x, yn, p, q)
         else:
@@ -220,6 +224,11 @@ class BatchBO(SearchDriver):
                                         kind="stable")[:q])
             else:
                 picks = self._thompson(mean, cov, q)
+        if BUS.active:
+            BUS.emit("bo.propose", round=self.state.round,
+                     acquisition=self.acquisition, history=len(hist),
+                     pool=len(cand), batch=q,
+                     dur=time.perf_counter() - t0)
         return [dict(cand[i]) for i in picks], [self.horizon] * q
 
     def _posterior(self, x, yn, p):

@@ -41,6 +41,8 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro.obs.bus import BUS
+
 from ..report import MAX, MIN, pareto_front, score_vector, _dominates_scores
 from ..runner import LaneStates, ResumeHandle, memoize_build, run_sweep
 from ..schedule import ChunkSchedule
@@ -211,6 +213,13 @@ class SearchDriver:
             if not points:
                 return None
             self._asked = (list(points), [float(u) for u in horizons])
+            if BUS.active:
+                us = self._asked[1]
+                BUS.emit("search.ask", round=self.state.round,
+                         n=len(points), u_min=min(us), u_max=max(us),
+                         warm=(0 if self._handles is None else
+                               sum(1 for h in self._handles
+                                   if h is not None)))
             return self._asked
         return None
 
@@ -240,6 +249,7 @@ class SearchDriver:
         assert self._asked is not None, "tell() without a pending ask()"
         points, horizons = self._asked
         assert len(rows) == len(points), (len(rows), len(points))
+        tele = BUS.active
         costs = []
         for j, (u, row) in enumerate(zip(horizons, rows)):
             h = self._handles[j] if self._handles is not None else None
@@ -251,8 +261,21 @@ class SearchDriver:
             self.state.history.append(trial)
             self.state.budget += cost
             costs.append(cost)
+            if tele:
+                BUS.emit("trial", round=self.state.round, until=u,
+                         cycles=cost, warm=h is not None,
+                         value=self.objective.scalar(row), row=trial)
+                BUS.count("search.trials")
         self._costs = costs
         self._tell(points, horizons, rows, states)
+        if tele:
+            best = self.best()
+            BUS.emit("search.tell", round=self.state.round, n=len(rows),
+                     cost=sum(costs), budget=self.state.budget,
+                     cycle_budget=self.cycle_budget, best=best)
+            BUS.gauge("search.budget", self.state.budget)
+            if best is not None:
+                BUS.gauge("search.best", self.objective.scalar(best))
         self._asked = None
         self._handles = None
         self._costs = None
@@ -374,6 +397,11 @@ def run_search(build_fn: Callable, driver: SearchDriver, *,
     :class:`SearchState` snapshot point).
     """
     build_fn = memoize_build(build_fn)
+    if BUS.active:
+        BUS.emit("search.start", driver=type(driver).__name__,
+                 objective=driver.objective.objectives,
+                 cycle_budget=driver.cycle_budget,
+                 resumed_round=driver.state.round)
     rounds = 0
     while True:
         asked = driver.ask()
@@ -396,7 +424,11 @@ def run_search(build_fn: Callable, driver: SearchDriver, *,
         rounds += 1
         if callback is not None:
             callback(driver)
-    return SearchResult(best=driver.best(), front=driver.front(),
+    best = driver.best()
+    if BUS.active:
+        BUS.emit("search.end", rounds=rounds, budget=driver.state.budget,
+                 trials=len(driver.state.history), best=best)
+    return SearchResult(best=best, front=driver.front(),
                         rows=list(driver.state.history),
                         budget=driver.state.budget, rounds=rounds,
                         state=driver.state)

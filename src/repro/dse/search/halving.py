@@ -48,6 +48,8 @@ import json
 import math
 from typing import Mapping, Sequence
 
+from repro.obs.bus import BUS
+
 from ..runner import LaneStates, ResumeHandle
 from ..sweep import SweepSpec
 from .driver import Objective, SearchDriver, SearchState
@@ -210,6 +212,7 @@ class SuccessiveHalving(SearchDriver):
                     del self._handle_store[k]
             last_rung = br["rung"] >= len(self.horizons) - 1
             if last_rung:
+                keep, order = 0, []
                 br["alive"] = []         # final rung: recorded, retired
             else:
                 keep = max(1, math.ceil(n / self.eta))
@@ -221,6 +224,30 @@ class SuccessiveHalving(SearchDriver):
                         self._handle_store[
                             self._hkey(bi, seg_points[i])] = \
                             states.handle(gi, horizons[gi])
+            if BUS.active:
+                # warm-vs-cold cost: `spent` is what this rung actually
+                # charged (warm lanes pay increments); `replay_cycles`
+                # is what a replay-from-zero rung would have cost
+                replay = 0.0
+                for row in seg:
+                    try:
+                        replay += float(row.get("virtual_time",
+                                                self.horizons[br["rung"]]))
+                    except (TypeError, ValueError):
+                        replay += float(self.horizons[br["rung"]])
+                BUS.emit(
+                    "rung.promote", bracket=bi, rung=br["rung"],
+                    horizon=self.horizons[br["rung"]], n=n,
+                    promoted=keep if not last_rung else 0,
+                    dropped=n - keep if not last_rung else n,
+                    warm=self.warm, final=last_rung,
+                    spent=(float(sum(self._costs[lo:lo + n]))
+                           if self._costs is not None else None),
+                    replay_cycles=replay,
+                    bracket_spent=br.get("spent", 0.0),
+                    bracket_budget=br.get("budget"),
+                    promoted_points=[seg_points[i] for i in order[:keep]]
+                    [:8])
             br["rung"] += 1
             lo += n
         self._segments = None

@@ -27,10 +27,12 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import jax
 
 from repro.ckpt import list_steps, save_checkpoint
+from repro.obs.bus import BUS
 
 from ..runner import ResumeHandle
 from .driver import SearchState
@@ -47,9 +49,14 @@ def save_search(path: str, driver, step: int | None = None) -> str:
                 "epochs": int(h.epochs)} for k, h in store.items()}
     step = int(driver.state.round) if step is None else int(step)
     os.makedirs(path, exist_ok=True)
-    return save_checkpoint(path, {"handles": tree}, step,
-                           extra={"search_state": driver.state.to_json(),
-                                  "handles": meta})
+    t0 = time.perf_counter()
+    out = save_checkpoint(path, {"handles": tree}, step,
+                          extra={"search_state": driver.state.to_json(),
+                                 "handles": meta})
+    if BUS.active:
+        BUS.emit("ckpt.save", path=str(out), step=step,
+                 handles=len(store), dur=time.perf_counter() - t0)
+    return out
 
 
 def load_search(path: str, template_state,
@@ -69,6 +76,7 @@ def load_search(path: str, template_state,
     if not steps:
         raise FileNotFoundError(f"no search checkpoints under {path}")
     step = steps[-1] if step is None else step
+    t0 = time.perf_counter()
     d = os.path.join(path, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as fh:
         manifest = json.load(fh)
@@ -84,4 +92,8 @@ def load_search(path: str, template_state,
                                   until=float(m["until"]),
                                   epochs=int(m["epochs"]))
     state = SearchState.from_json(manifest["extra"]["search_state"])
+    if BUS.active:
+        BUS.emit("ckpt.load", path=str(d), step=int(step),
+                 handles=len(handles), round=state.round,
+                 dur=time.perf_counter() - t0)
     return state, handles

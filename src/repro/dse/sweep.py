@@ -167,6 +167,20 @@ class SweepSpec:
     def has_shape_axes(self) -> bool:
         return any(k.startswith(SHAPE_PREFIX) for k in self.axes)
 
+    def summary(self) -> dict:
+        """A small JSON-safe description of the spec — axis names, value
+        counts per axis, point count — for telemetry (``sweep.start``
+        events carry it) and logs.  Never materializes values: a
+        192-point grid summarizes to a few dozen bytes.
+        """
+        counts: dict[str, set] = {}
+        for pt in self.points:
+            for k, v in pt.items():
+                counts.setdefault(k, set()).add(
+                    v if isinstance(v, (int, float, str, bool)) else str(v))
+        return {"n_points": len(self.points),
+                "axes": {k: len(vs) for k, vs in counts.items()}}
+
     def validate(self, target, static_ok: Sequence[str] | None = None
                  ) -> "SweepSpec":
         """Check every axis path against ``target`` (a ``Simulation`` or a

@@ -1,0 +1,70 @@
+"""Regression: Daisen-lite HTML export must survive hostile task
+strings — `</script>` or markup in category/action/location used to
+terminate the embedded JSON mid-page (template injection)."""
+import json
+
+from repro.core.daisen import _embed_json, export_html
+from repro.core.tracing import Task
+
+
+def _task(**kw):
+    base = dict(id="t1", parent_id="", category="c", action="a",
+                location="loc", start=0.0, end=1.0)
+    base.update(kw)
+    return Task(**base)
+
+
+def test_embed_json_neutralizes_markup():
+    s = _embed_json({"x": "</script><script>alert(1)</script>"})
+    assert "</script>" not in s and "<" not in s and ">" not in s
+    assert json.loads(s) == {"x": "</script><script>alert(1)</script>"}
+    # & escaped too (guards against HTML entity interpretation)
+    assert "&" not in _embed_json({"x": "a&b"})
+    assert json.loads(_embed_json({"x": "a&b"})) == {"x": "a&b"}
+
+
+def test_export_html_with_hostile_strings(tmp_path):
+    evil = "</script><script>alert('xss')</script>"
+    tasks = [
+        _task(id="t1", category=evil, action="a", location="core0"),
+        _task(id="t2", category="c", action=evil, location="core0",
+              start=1.0, end=2.0),
+        _task(id="t3", category="c", action="a", location=evil,
+              start=2.0, end=3.0, tags=[evil]),
+    ]
+    out = export_html(tasks, str(tmp_path / "trace.html"),
+                      title="run " + evil)
+    doc = open(out).read()
+    # exactly the template's own script open/close tags survive — the
+    # payload never terminates the script element early, and the title
+    # never introduces an executable script element
+    assert doc.count("</script>") == 1
+    assert doc.count("<script>") == 1
+    # the payload is still recoverable from the embedded JSON
+    payload = doc.split("const TASKS = ", 1)[1].split(";\n", 1)[0]
+    rows = json.loads(payload)
+    assert rows[0]["category"] == evil
+    assert rows[2]["tags"] == [evil]
+
+
+def test_export_html_with_literal_placeholder_text(tmp_path):
+    """A task string containing the template placeholders themselves
+    must not corrupt the substitution (positional split, not sequential
+    replace)."""
+    tasks = [_task(category="__TASKS__", action="__TITLE__")]
+    out = export_html(tasks, str(tmp_path / "t.html"),
+                      title="__TASKS__ weird")
+    doc = open(out).read()
+    payload = doc.split("const TASKS = ", 1)[1].split(";\n", 1)[0]
+    rows = json.loads(payload)
+    assert rows[0]["category"] == "__TASKS__"
+    assert rows[0]["action"] == "__TITLE__"
+    assert "__TASKS__ weird" in doc                # title rendered
+
+
+def test_export_html_escapes_title(tmp_path):
+    out = export_html([_task()], str(tmp_path / "t.html"),
+                      title="<img src=x onerror=alert(1)>")
+    doc = open(out).read()
+    assert "<img" not in doc
+    assert "&lt;img" in doc

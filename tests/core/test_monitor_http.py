@@ -1,0 +1,100 @@
+"""Monitor HTTP endpoint hardening: ephemeral-port fallback, the
+/status and /bottlenecks routes, and clean idempotent shutdown."""
+import json
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core.monitor import HttpEndpoint, Monitor
+from repro.sims.memsys import build
+
+
+def _get(port, path):
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}{path}", timeout=5) as r:
+        return json.loads(r.read().decode())
+
+
+@pytest.fixture
+def mon():
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4)
+    m = Monitor(sim, st, http_port=0)
+    yield m
+    m.shutdown()
+
+
+def test_http_status_and_bottlenecks(mon):
+    assert mon.http_port and mon.http_port > 0
+    stat = _get(mon.http_port, "/status")
+    for key in ("virtual_time", "epochs", "ticks", "progress_ratio",
+                "pending_messages"):
+        assert key in stat, key
+    assert _get(mon.http_port, "/bottlenecks") == []   # nothing ran yet
+
+    mon.state = mon.sim.run(mon.state, until=5.0)
+    stat = _get(mon.http_port, "/status")
+    assert stat["epochs"] > 0
+
+
+def test_port_in_use_falls_back_to_ephemeral(mon):
+    """A second monitor requesting the same port must come up on an
+    ephemeral port and report the actually-bound one."""
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4)
+    m2 = Monitor(sim, st, http_port=mon.http_port)
+    try:
+        assert m2.http_port is not None
+        assert m2.http_port != mon.http_port
+        assert m2._httpd.requested_port == mon.http_port
+        assert "virtual_time" in _get(m2.http_port, "/status")
+        # the original monitor is undisturbed
+        assert "virtual_time" in _get(mon.http_port, "/status")
+    finally:
+        m2.shutdown()
+
+
+def test_shutdown_releases_port_and_is_idempotent(mon):
+    port = mon.http_port
+    mon.shutdown()
+    assert mon.http_port is None and mon._httpd is None
+    with pytest.raises((urllib.error.URLError, OSError)):
+        urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/status", timeout=1)
+    mon.shutdown()                      # second call is a no-op
+    mon.close()                         # alias too
+
+
+def test_monitor_without_http_shutdown_is_safe():
+    sim, st = build(n_cores=2, pattern="mixed", n_reqs=4)
+    m = Monitor(sim, st)                # no endpoint requested
+    assert m.http_port is None
+    m.shutdown()
+
+
+def test_endpoint_ephemeral_rebind_reuses_handler():
+    from http.server import BaseHTTPRequestHandler
+
+    class H(BaseHTTPRequestHandler):
+        def do_GET(self):
+            body = b'{"ok": true}'
+            self.send_response(200)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):
+            pass
+
+    a = HttpEndpoint(H, port=0)
+    try:
+        b = HttpEndpoint(H, port=a.port)      # occupied -> ephemeral
+        try:
+            assert b.port != a.port
+            assert b.requested_port == a.port
+            assert b.url.endswith(str(b.port))
+            assert _get(b.port, "/")["ok"] is True
+        finally:
+            b.shutdown()
+    finally:
+        a.shutdown()

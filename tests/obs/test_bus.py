@@ -1,0 +1,175 @@
+"""The telemetry bus contract: zero-cost when disabled, flat versioned
+events, resilient sinks, the metrics registry, JSONL round-trip."""
+import json
+import threading
+
+import pytest
+
+from repro.obs import (BUS, SCHEMA_VERSION, Bus, JsonlSink, MemorySink,
+                       capture, read_jsonl)
+from repro.obs.bus import MAX_SINK_ERRORS
+
+
+def test_disabled_emit_materializes_nothing():
+    bus = Bus()
+    seq0 = bus.seq
+    assert bus.emit("anything", x=1) is None
+    assert not bus.active
+    assert bus.seq == seq0          # the monotonic counter never moved
+
+
+def test_emit_fans_out_in_order():
+    bus = Bus()
+    a, b = MemorySink(), MemorySink()
+    bus.attach(a)
+    bus.attach(b)
+    bus.emit("one", x=1)
+    bus.emit("two", y="z")
+    assert a.kinds() == ["one", "two"] == b.kinds()
+    assert [e["seq"] for e in a.events] == [0, 1]
+    assert all("ts" in e for e in a.events)
+    assert a.events[0]["x"] == 1 and a.events[1]["y"] == "z"
+    bus.detach(a)
+    bus.emit("three")
+    assert a.kinds() == ["one", "two"]
+    assert b.kinds() == ["one", "two", "three"]
+
+
+def test_reserved_keys_cannot_be_overridden_by_mistake():
+    bus = Bus()
+    sink = bus.attach(MemorySink())
+    ev = bus.emit("k", dur=0.5, what="rows")
+    assert ev["kind"] == "k" and ev["dur"] == 0.5
+    assert sink.events[-1] is ev
+
+
+def test_sink_errors_never_propagate():
+    bus = Bus()
+
+    class Bad:
+        def on_event(self, ev):
+            raise RuntimeError("boom")
+
+    good = MemorySink()
+    bus.attach(Bad())
+    bus.attach(good)
+    for _ in range(MAX_SINK_ERRORS + 5):
+        bus.emit("k")
+    assert len(good.events) == MAX_SINK_ERRORS + 5   # campaign survived
+    assert len(bus.sink_errors) == MAX_SINK_ERRORS   # bounded record
+    assert bus.sink_errors[0][0] == "Bad"
+
+
+def test_span_emits_completed_duration():
+    bus = Bus()
+    sink = bus.attach(MemorySink())
+    with bus.span("work", label="x") as extra:
+        extra["n"] = 3
+    (ev,) = sink.events
+    assert ev["kind"] == "work" and ev["label"] == "x" and ev["n"] == 3
+    assert ev["dur"] >= 0.0
+
+
+def test_metrics_registry():
+    bus = Bus()
+    bus.attach(MemorySink())       # metric sugar is active-gated
+    bus.count("c")
+    bus.count("c", 2)
+    bus.gauge("g", 7.5)
+    for v in (1.0, 3.0, 2.0):
+        bus.observe("h", v)
+    snap = bus.metrics.snapshot()
+    assert snap["c"] == 3.0
+    assert snap["g"] == 7.5
+    assert snap["h"]["count"] == 3 and snap["h"]["min"] == 1.0
+    assert snap["h"]["max"] == 3.0 and snap["h"]["last"] == 2.0
+    assert snap["h"]["mean"] == pytest.approx(2.0)
+    with pytest.raises(TypeError):
+        bus.metrics.gauge("c")     # name already registered as a counter
+
+
+def test_metrics_noop_when_disabled():
+    bus = Bus()
+    bus.count("c")
+    bus.gauge("g", 1.0)
+    bus.observe("h", 1.0)
+    assert bus.metrics.snapshot() == {}
+
+
+def test_capture_attaches_and_detaches_default_bus():
+    assert not BUS.active
+    with capture() as sink:
+        assert BUS.active
+        BUS.emit("inside")
+    assert not BUS.active
+    assert sink.kinds() == ["inside"]
+
+
+def test_emit_is_thread_safe():
+    bus = Bus()
+    sink = bus.attach(MemorySink())
+    n, threads = 200, []
+    for t in range(4):
+        th = threading.Thread(
+            target=lambda: [bus.emit("k") for _ in range(n)])
+        threads.append(th)
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(sink.events) == 4 * n
+    assert sorted(e["seq"] for e in sink.events) == list(range(4 * n))
+
+
+# ---------------------------------------------------------------------------
+def test_jsonl_round_trip(tmp_path):
+    path = tmp_path / "events.jsonl"
+    bus = Bus()
+    sink = bus.attach(JsonlSink(str(path)))
+    bus.emit("round.end", round=0, dur=0.25, frozen_ids=[1, 2])
+    bus.emit("search.tell", round=0, budget=123.5)
+    sink.close()
+
+    lines = path.read_text().strip().splitlines()
+    header = json.loads(lines[0])
+    assert header["kind"] == "obs.meta"
+    assert header["v"] == SCHEMA_VERSION
+
+    events = read_jsonl(str(path))
+    assert [e["kind"] for e in events] == ["round.end", "search.tell"]
+    assert events[0]["frozen_ids"] == [1, 2]
+    assert events[1]["budget"] == 123.5
+
+
+def test_jsonl_unjsonable_payload_degrades_to_repr(tmp_path):
+    path = tmp_path / "e.jsonl"
+    bus = Bus()
+    sink = bus.attach(JsonlSink(str(path)))
+    bus.emit("k", weird=object())
+    sink.close()
+    (ev,) = read_jsonl(str(path))
+    assert ev["kind"] == "k" and "object" in ev["weird"]
+
+
+def test_jsonl_tolerates_torn_tail(tmp_path):
+    path = tmp_path / "e.jsonl"
+    bus = Bus()
+    sink = bus.attach(JsonlSink(str(path)))
+    bus.emit("ok")
+    sink.flush()
+    with open(path, "a") as fh:
+        fh.write('{"kind": "torn", "half')    # live log mid-write
+    events = read_jsonl(str(path))
+    assert [e["kind"] for e in events] == ["ok"]
+    sink.close()
+
+
+def test_jsonl_version_check(tmp_path):
+    path = tmp_path / "e.jsonl"
+    path.write_text('{"kind": "obs.meta", "v": 999}\n{"kind": "x"}\n')
+    with pytest.raises(ValueError, match="schema"):
+        read_jsonl(str(path))
+    assert [e["kind"] for e in read_jsonl(str(path),
+                                          require_version=False)] == ["x"]
+    (tmp_path / "none.jsonl").write_text('{"kind": "x"}\n')
+    with pytest.raises(ValueError, match="header"):
+        read_jsonl(str(tmp_path / "none.jsonl"))

@@ -1,0 +1,203 @@
+"""The live campaign dashboard: /campaign snapshots (including
+mid-search progress via chunked rounds), SSE replay, /metrics, and the
+port-in-use fallback inherited from HttpEndpoint."""
+import http.client
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.dse import SuccessiveHalving, SweepSpec, memoize_build, run_search
+from repro.obs import Bus, CampaignServer, CampaignStats
+from repro.sims.memsys import build
+
+MAX_H = 2000.0
+
+
+def _get(port, path):
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}{path}", timeout=5) as r:
+        return r.status, json.loads(r.read().decode())
+
+
+# ---------------------------------------------------------------------------
+def test_stats_aggregation_from_synthetic_events():
+    st = CampaignStats()
+    st.on_event({"kind": "search.start", "ts": 1.0, "seq": 0,
+                 "driver": "SuccessiveHalving", "objective": ["est_finish"],
+                 "cycle_budget": 5000.0})
+    st.on_event({"kind": "round.end", "ts": 2.0, "seq": 1, "epochs": 40,
+                 "survivors": 3, "pending": 5, "pool": 8})
+    st.on_event({"kind": "compile", "ts": 2.1, "seq": 2, "n": 2,
+                 "dur": 0.5})
+    st.on_event({"kind": "transfer", "ts": 2.2, "seq": 3, "dur": 0.01})
+    st.on_event({"kind": "search.tell", "ts": 3.0, "seq": 4, "round": 0,
+                 "n": 8, "budget": 800.0, "best": {"x": 1}})
+    st.on_event({"kind": "rung.promote", "ts": 3.1, "seq": 5, "bracket": 0,
+                 "rung": 0, "horizon": 60.0, "promoted": 3, "dropped": 5,
+                 "warm": False, "spent": 480.0, "replay_cycles": 480.0})
+    snap = st.snapshot()
+    assert snap["events"] == 6
+    assert snap["rounds_drained"] == 1
+    assert snap["lanes"] == {"live": 3, "pending": 5, "pool": 8}
+    assert snap["epochs"]["total"] == 40
+    assert snap["compiles"] == {"count": 2, "dur_total": 0.5}
+    assert snap["transfers"]["count"] == 1
+    s = snap["search"]
+    assert s["driver"] == "SuccessiveHalving" and not s["done"]
+    assert s["round"] == 1 and s["trials"] == 8 and s["budget"] == 800.0
+    assert s["best"] == {"x": 1}
+    assert snap["cycles"]["cap"] == 5000.0
+    assert snap["cycles"]["remaining"] == 4200.0
+    assert snap["cycles"]["burn_fraction"] == pytest.approx(0.16)
+    assert len(snap["promotions"]) == 1
+    st.on_event({"kind": "search.end", "ts": 4.0, "seq": 6,
+                 "best": {"x": 2}})
+    assert st.snapshot()["search"]["done"]
+    assert st.snapshot()["search"]["best"] == {"x": 2}
+
+
+def test_unknown_kinds_only_bump_the_event_counter():
+    st = CampaignStats()
+    st.on_event({"kind": "totally.new", "ts": 1.0, "seq": 0})
+    snap = st.snapshot()
+    assert snap["events"] == 1 and snap["rounds_drained"] == 0
+
+
+# ---------------------------------------------------------------------------
+def test_campaign_endpoint_reports_live_progress_mid_search():
+    """A halving search over the memsys grid drains through chunked
+    rounds; polling /campaign after every tell must show monotone
+    progress *while the search is still running*."""
+    srv = CampaignServer(port=0)       # default bus: what the stack emits to
+    try:
+        bf = memoize_build(
+            lambda: build(n_cores=3, pattern="mixed", n_reqs=6,
+                          donate=True))
+        sim, st = bf()
+        total = int(np.sum(np.asarray(st.comp_state["core"]["remaining"])))
+
+        def extract(sim, s):
+            rem = int(np.sum(
+                np.asarray(s.comp_state["core"]["remaining"])))
+            vt = float(s.time)
+            return {"virtual_time": vt, "remaining": rem,
+                    "est_finish": vt * total / max(total - rem, 1)}
+
+        pool = SweepSpec.grid(
+            {"conn_latency[-1]": [10., 20., 30., 40.],
+             "kind.l1.extra_hit_rate": [0.0, 0.4, 0.8]})
+
+        mid = []
+
+        def poll(driver):
+            _, snap = _get(srv.port, "/campaign")
+            mid.append(snap)
+
+        drv = SuccessiveHalving(pool, "est_finish", max_horizon=MAX_H,
+                                min_horizon=60.0, eta=3, seed=0)
+        res = run_search(bf, drv, extract=extract, chunk=4, callback=poll)
+
+        assert len(mid) == res.rounds >= 2
+        # mid-flight snapshots: the first poll sees a live, not-done
+        # search with budget already burning; progress is monotone
+        assert mid[0]["search"]["driver"] == "SuccessiveHalving"
+        assert not mid[0]["search"]["done"]
+        assert mid[0]["search"]["budget"] > 0.0
+        assert mid[0]["rounds_drained"] >= 1
+        rounds = [m["search"]["round"] for m in mid]
+        assert rounds == sorted(rounds) and rounds[0] == 1
+        budgets = [m["search"]["budget"] for m in mid]
+        assert budgets == sorted(budgets)
+        assert budgets[-1] == pytest.approx(res.budget)
+        trials = [m["search"]["trials"] for m in mid]
+        assert trials[-1] == len(res.rows)
+
+        # after the run: done, and the winner is reported
+        _, final = _get(srv.port, "/campaign")
+        assert final["search"]["done"]
+        assert final["search"]["best"] == res.best
+        assert final["promotions"]
+    finally:
+        srv.close()
+
+
+def test_events_sse_replays_ring():
+    bus = Bus()
+    srv = CampaignServer(bus=bus, port=0)
+    try:
+        bus.emit("round.end", round=0, epochs=4, survivors=1,
+                 pending=0, pool=0)
+        bus.emit("sweep.end", n_points=1, groups=1, dur=0.1)
+
+        conn = http.client.HTTPConnection("127.0.0.1", srv.port, timeout=5)
+        conn.request("GET", "/events")
+        resp = conn.getresponse()
+        assert resp.status == 200
+        assert resp.getheader("Content-Type") == "text/event-stream"
+        got = []
+        while len(got) < 2:
+            line = resp.fp.readline()
+            if line.startswith(b"data: "):
+                got.append(json.loads(line[len(b"data: "):]))
+        assert [e["kind"] for e in got] == ["round.end", "sweep.end"]
+
+        # live event after connect also arrives on the open stream
+        bus.emit("search.tell", round=0, n=1, budget=10.0)
+        while True:
+            line = resp.fp.readline()
+            if line.startswith(b"data: "):
+                ev = json.loads(line[len(b"data: "):])
+                break
+        assert ev["kind"] == "search.tell"
+        conn.close()
+    finally:
+        srv.close()
+
+
+def test_metrics_index_and_404():
+    bus = Bus()
+    srv = CampaignServer(bus=bus, port=0)
+    try:
+        bus.count("dse.rounds", 3)
+        code, body = _get(srv.port, "/metrics")
+        assert code == 200 and body["dse.rounds"] == 3.0
+
+        with urllib.request.urlopen(srv.url, timeout=5) as r:
+            page = r.read().decode()
+        assert "campaign" in page and "/campaign" in page
+
+        with pytest.raises(urllib.error.HTTPError) as err:
+            _get(srv.port, "/nope")
+        assert err.value.code == 404
+    finally:
+        srv.close()
+
+
+def test_port_in_use_falls_back_to_ephemeral():
+    a = CampaignServer(bus=Bus(), port=0)
+    try:
+        b = CampaignServer(bus=Bus(), port=a.port)
+        try:
+            assert b.port != a.port        # rebound, not crashed
+            assert b.endpoint.requested_port == a.port
+            code, _ = _get(b.port, "/campaign")
+            assert code == 200
+        finally:
+            b.close()
+    finally:
+        a.close()
+
+
+def test_close_detaches_and_releases():
+    bus = Bus()
+    srv = CampaignServer(bus=bus, port=0)
+    assert bus.active
+    port = srv.port
+    srv.close()
+    assert not bus.active
+    srv.close()                            # idempotent
+    with pytest.raises(OSError):
+        urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/campaign", timeout=1)

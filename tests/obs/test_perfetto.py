@@ -1,0 +1,171 @@
+"""Chrome-trace (Perfetto) export and the Daisen-lite campaign HTML:
+format validity of every emitted trace event, campaign/engine process
+split, the JSONL-path input, and the engine-task bridge."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.tracing import TracingDomain
+from repro.dse import SuccessiveHalving, SweepSpec, memoize_build, run_search
+from repro.obs import (Bus, JsonlSink, bridge_domain, campaign_tasks,
+                       capture, export_campaign_html, export_chrome_trace,
+                       to_chrome_trace)
+from repro.sims.memsys import build
+
+MAX_H = 2000.0
+
+
+def _validate_chrome_trace(trace):
+    """Assert the trace-event-format invariants Perfetto's importer
+    relies on (the JSON Array/Object format spec)."""
+    assert isinstance(trace, dict)
+    evs = trace["traceEvents"]
+    assert isinstance(evs, list) and evs
+    for ev in evs:
+        assert isinstance(ev["ph"], str) and ev["ph"] in "XiCM", ev
+        assert isinstance(ev["name"], str) and ev["name"]
+        assert isinstance(ev["pid"], int)
+        assert isinstance(ev["tid"], int)
+        assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0, ev
+        if ev["ph"] == "i":
+            assert ev["s"] in ("g", "p", "t")
+        if ev["ph"] == "M":
+            assert ev["name"] in ("process_name", "thread_name")
+            assert "name" in ev["args"]
+        if "args" in ev:
+            json.dumps(ev["args"])      # args must be JSON-serializable
+    return evs
+
+
+@pytest.fixture(scope="module")
+def campaign_events(tmp_path_factory):
+    """One real halving campaign captured to memory + JSONL."""
+    bf = memoize_build(lambda: build(n_cores=3, pattern="mixed", n_reqs=6,
+                                     donate=True))
+    sim, st = bf()
+    total = int(np.sum(np.asarray(st.comp_state["core"]["remaining"])))
+
+    def extract(sim, s):
+        rem = int(np.sum(np.asarray(s.comp_state["core"]["remaining"])))
+        vt = float(s.time)
+        return {"virtual_time": vt, "remaining": rem,
+                "est_finish": vt * total / max(total - rem, 1)}
+
+    pool = SweepSpec.grid({"conn_latency[-1]": [10., 20., 30., 40.],
+                           "kind.l1.extra_hit_rate": [0.0, 0.4, 0.8]})
+    path = tmp_path_factory.mktemp("pf") / "campaign.jsonl"
+    from repro.obs import BUS
+    sink = BUS.attach(JsonlSink(str(path)))
+    try:
+        with capture() as mem:
+            drv = SuccessiveHalving(pool, "est_finish", max_horizon=MAX_H,
+                                    min_horizon=60.0, eta=3, seed=0)
+            run_search(bf, drv, extract=extract, chunk=4)
+    finally:
+        BUS.detach(sink)
+        sink.close()
+    return mem.events, str(path)
+
+
+def test_campaign_trace_validates_and_covers_activity(campaign_events):
+    events, _ = campaign_events
+    trace = to_chrome_trace(events)
+    evs = _validate_chrome_trace(trace)
+
+    # the campaign process is named, with the expected named tracks
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert "dse-campaign" in procs
+    tracks = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"rounds", "compile", "transfer", "search",
+            "trials"} <= tracks
+    assert any(t.startswith("bracket") for t in tracks)
+
+    names = [e["name"] for e in evs]
+    assert any(n.startswith("round ") for n in names)
+    assert any(n.startswith("search round") for n in names)
+    assert any("promote" in n for n in names)
+    # counter tracks render the burn-down / lane occupancy
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    assert {"budget", "lanes"} <= counters
+    # search-round slices pair ask->tell: positive duration, budget args
+    slices = [e for e in evs if e["name"].startswith("search round")]
+    assert slices and all(s["dur"] > 0 for s in slices)
+    assert all("budget" in s["args"] for s in slices)
+
+
+def test_export_accepts_jsonl_path(campaign_events, tmp_path):
+    events, jsonl = campaign_events
+    out = export_chrome_trace(jsonl, str(tmp_path / "trace.json"))
+    with open(out) as fh:
+        trace = json.load(fh)
+    _validate_chrome_trace(trace)
+    # the file-based export matches the in-memory one event-for-event
+    assert [e["name"] for e in trace["traceEvents"]] == \
+        [e["name"] for e in to_chrome_trace(events)["traceEvents"]]
+
+
+def test_engine_task_bridge_lands_in_engine_process():
+    bus = Bus()
+    dom = TracingDomain("engine")
+    tracer = bridge_domain(dom, bus=bus, clock="virtual")
+    with capture(bus) as mem:
+        with dom.task("inst", "load", "Core0"):
+            with dom.task("mem", "read", "L1[0]"):
+                pass
+    dom.detach(tracer)
+
+    tasks = mem.of("task")
+    assert len(tasks) == 2
+    assert {t["location"] for t in tasks} == {"Core0", "L1[0]"}
+    assert all(t["clock"] == "virtual" for t in tasks)
+    child = [t for t in tasks if t["location"] == "L1[0]"][0]
+    parent = [t for t in tasks if t["location"] == "Core0"][0]
+    assert child["parent_id"] == parent["id"]
+
+    evs = _validate_chrome_trace(to_chrome_trace(mem.events))
+    engine = [e for e in evs if e["pid"] == 2 and e["ph"] == "X"]
+    assert len(engine) == 2
+    assert {e["name"] for e in engine} == {"inst/load", "mem/read"}
+    assert len({e["tid"] for e in engine}) == 2    # one track per location
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"
+             and e["pid"] == 2}
+    assert procs == {"engine"}
+
+
+def test_bridge_is_inert_without_sinks():
+    bus = Bus()
+    dom = TracingDomain("engine")
+    bridge_domain(dom, bus=bus)
+    with dom.task("a", "b", "c"):
+        pass
+    assert bus.seq == 0
+
+
+# ---------------------------------------------------------------------------
+def test_campaign_tasks_rebased_for_daisen(campaign_events):
+    events, _ = campaign_events
+    tasks = campaign_tasks(events)
+    assert tasks
+    starts = [t.start for t in tasks]
+    assert min(starts) >= 0.0                      # rebased to first ts
+    assert all(t.end >= t.start for t in tasks)
+    locs = {t.location for t in tasks}
+    assert {"rounds", "search", "transfer"} <= locs
+
+
+def test_export_campaign_html(campaign_events, tmp_path):
+    events, jsonl = campaign_events
+    out = export_campaign_html(events, str(tmp_path / "c.html"),
+                               title="halving campaign")
+    doc = open(out).read()
+    assert "Daisen-lite" in doc and "halving campaign" in doc
+    assert "rounds" in doc
+    # the JSONL path works as input too
+    out2 = export_campaign_html(jsonl, str(tmp_path / "c2.html"))
+    assert "Daisen-lite" in open(out2).read()
