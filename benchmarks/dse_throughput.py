@@ -111,7 +111,7 @@ def bench(n_cores=N_CORES, n_reqs=N_REQS):
     out.time.block_until_ready()
     runner.warm_ladder(
         st, pb_by_b[b_max],
-        make_ladder(b_max, top=runner._tuned_top.get(False, b_max)))
+        make_ladder(b_max, top=runner._tuned_top.get(1, b_max)))
 
     # baseline 2: sequential runs sharing one compiled program (traced
     # params, no batching)
@@ -145,7 +145,7 @@ def bench(n_cores=N_CORES, n_reqs=N_REQS):
         out = runner.run_rounds(st, pb, UNTIL)          # warm pass
         out.time.block_until_ready()
         runner.warm_ladder(
-            st, pb, make_ladder(b, top=runner._tuned_top.get(False, b)))
+            st, pb, make_ladder(b, top=runner._tuned_top.get(1, b)))
         dt = _timed_rounds(runner, st, pb, UNTIL)
         cps = b / dt
         chunk = runner.last_rounds["chunk"]

@@ -8,10 +8,13 @@
   (framework) kernels             attention/SSD algorithm benchmarks
   (dse)      dse_throughput       batched-sweep configs/sec (DSE.md)
   (dse)      struct_sweep         topology-family shape sweep vs per-shape
-                                  rebuild+recompile (DSE.md families)
+                                  rebuild+recompile (DSE.md families) +
+                                  two-process persistent-cache cold start
   (dse)      search_convergence   successive-halving search vs exhaustive
                                   sweep: objective gap + cycle budget
                                   (DSE.md "Search")
+  (dse)      sharded_sweep        2-device sharded rounds vs the monolithic
+                                  pmap round (DSE.md "Sharded sweeps")
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms for the assigned
 architectures come from the dry-run (see launch/dryrun.py + EXPERIMENTS.md);
@@ -35,8 +38,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (dse_throughput, kernels, onira_cpi, parallel_sim,
-                   pdes_scaling, search_convergence, smart_ticking,
-                   struct_sweep, tracing_overhead, triosim_validation)
+                   pdes_scaling, search_convergence, sharded_sweep,
+                   smart_ticking, struct_sweep, tracing_overhead,
+                   triosim_validation)
     modules = {
         "smart_ticking": smart_ticking,
         "parallel_sim": parallel_sim,
@@ -48,6 +52,7 @@ def main() -> None:
         "dse_throughput": dse_throughput,
         "struct_sweep": struct_sweep,
         "search_convergence": search_convergence,
+        "sharded_sweep": sharded_sweep,
     }
     if args.only:
         modules = {k: v for k, v in modules.items() if k in args.only}

@@ -1,0 +1,140 @@
+"""Sharded sweep rounds over a 2-device mesh versus the monolithic pmap
+round it replaces (DSE.md "Sharded sweeps and the persistent cache").
+
+The multi-device path is only reachable with >1 device, so the whole
+measurement runs in one subprocess with two forced host devices (the
+same trick ``tests/dse/test_sharded.py`` uses).  Inside it, on the
+straggler-heavy workload of ``dse_throughput`` (B=256, per-lane horizons
+spread ~8x):
+
+* ``pmap_monolith`` — lanes laid out ``[2, 128]``, ONE ``jax.pmap`` of
+  the vmapped run to every lane's own horizon: the pre-rounds sharding
+  story.  Each device iterates until its *slowest* local lane is done,
+  finished lanes burn masked epochs, and a drained device idles while
+  its neighbour's stragglers grind on.
+* ``sharded_rounds`` — ``run_rounds(shard=True)``: one shard_map-of-vmap
+  executable per ladder rung across the whole mesh, with the global
+  harvest/compact/refill re-packing survivors across shards each round.
+
+Both paths compute bit-identical rows (asserted in the worker); the CI
+bar gates the speedup at >= 1.5x.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+_WORKER = textwrap.dedent("""
+    import json, time
+    import jax
+    import numpy as np
+    assert jax.local_device_count() == 2, jax.local_device_count()
+    from repro.dse import BatchRunner, build_param_batch, stack_states
+    from repro.sims.memsys import build
+
+    B, D = 256, 2
+    SPREAD = 8       # horizons span [drain/8, ~drain]
+    REPS = 2
+
+    sim, st = build(n_cores=8, pattern="mixed", n_reqs=256, donate=True)
+    pts = [{"conn_latency[-1]": 10.0 + (30.0 * i) / (B - 1),
+            "kind.l1.extra_hit_rate": 0.8 * ((i * 7) % B) / (B - 1)}
+           for i in range(B)]
+    pb = build_param_batch(sim, pts)
+
+    # per-lane horizons: ~8x spread with a straggler skew — 90% of the
+    # lanes stop in the low-horizon band, 10% climb to the workload's
+    # drain time (the classic DSE shape: most configs answer quickly, a
+    # few pathological ones grind).  An i*11 stride decorrelates the
+    # stragglers from the param axes AND from the [2, 128] shard
+    # boundary, so the pmap baseline is not rigged: both devices get
+    # their fair share of long lanes.
+    r0 = BatchRunner(sim)
+    probe = r0.run_batch(stack_states(st, 1),
+                         jax.tree.map(lambda x: x[:1], pb), 1e9)
+    top = float(probe.time[0]) * 0.9
+    lo = top / SPREAD
+    frac = ((np.arange(B) * 11) % B) / (B - 1)
+    u = np.where(frac < 0.9, lo + (frac / 0.9) * lo * 0.25,
+                 lo + (top - lo) * (frac - 0.9) / 0.1).astype(np.float32)
+    m = np.full(B, 2_000_000, np.int32)
+
+    # ---- baseline: one pmapped round, [2, 128] lanes, full horizons
+    def one(s, p, uu, mm):
+        return sim._run(s, uu, mm, params=p)
+    pm = jax.pmap(jax.vmap(one), donate_argnums=(0,))
+    mesh = lambda t: jax.tree.map(
+        lambda x: x.reshape((D, B // D) + x.shape[1:]), t)
+    pbs = mesh(pb)
+    us, ms = u.reshape(D, B // D), m.reshape(D, B // D)
+    base_out = pm(mesh(stack_states(st, B)), pbs, us, ms)  # compile
+    jax.block_until_ready(base_out.time)
+    dt_base = float("inf")
+    for _ in range(REPS):
+        sb = jax.block_until_ready(mesh(stack_states(st, B)))
+        t0 = time.perf_counter()
+        base_out = pm(sb, pbs, us, ms)
+        base_out.time.block_until_ready()
+        dt_base = min(dt_base, time.perf_counter() - t0)
+
+    # ---- sharded rounds: ladder + global cross-shard rebalancing
+    runner = BatchRunner(sim)
+    out = runner.run_rounds(st, pb, u, shard=True)   # compile + autotune
+    out.time.block_until_ready()
+    np.testing.assert_array_equal(                   # same computation
+        np.asarray(out.time), np.asarray(base_out.time).reshape(B))
+    out = runner.run_rounds(st, pb, u, shard=True)   # narrowed-ladder warm
+    out.time.block_until_ready()
+    dt_rounds = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        out = runner.run_rounds(st, pb, u, shard=True)
+        out.time.block_until_ready()
+        dt_rounds = min(dt_rounds, time.perf_counter() - t0)
+
+    print(json.dumps({
+        "dt_base": dt_base, "dt_rounds": dt_rounds, "B": B,
+        "chunk": runner.last_rounds["chunk"],
+        "rounds": runner.last_rounds["rounds"],
+        "shard": runner.last_rounds["shard"]}))
+""")
+
+
+def bench():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2").strip()
+    r = subprocess.run([sys.executable, "-c", _WORKER],
+                       capture_output=True, text=True, timeout=1800,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded worker failed: {r.stderr[-3000:]}")
+    d = json.loads(r.stdout.strip().splitlines()[-1])
+    b, base_cps = d["B"], d["B"] / d["dt_base"]
+    cps = b / d["dt_rounds"]
+    return [
+        {
+            "name": "sharded_sweep/pmap_monolith_B256_mixed",
+            "us_per_call": d["dt_base"] * 1e6,
+            "derived": f"{base_cps:.1f} configs/s (one pmap round, "
+                       f"[2, {b // 2}] lanes, ~8x horizon spread)",
+            "configs_per_sec": base_cps,
+        },
+        {
+            "name": "sharded_sweep/sharded_rounds_B256_mixed",
+            "us_per_call": d["dt_rounds"] * 1e6,
+            "derived": f"{cps:.1f} configs/s "
+                       f"({cps / base_cps:.2f}x pmap monolith, "
+                       f"chunk {d['chunk']}, {d['rounds']} rounds, "
+                       f"{d['shard']} shards) "
+                       f"[acceptance: >=1.5x pmap monolith]",
+            "configs_per_sec": cps,
+            "chunk": d["chunk"],
+            "rounds": d["rounds"],
+            "shards": d["shard"],
+            "speedup_vs_pmap": cps / base_cps,
+        },
+    ]

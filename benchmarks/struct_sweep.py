@@ -13,7 +13,24 @@ A 4-point ``shape.core`` ∈ {1, 2, 4, 8} sweep of the memsys hierarchy:
   DSE campaign the single family compile amortizes across every round;
   the ≥5x CI acceptance bar compares this rate against the rebuild
   baseline, which pays compilation per point forever).
+
+Plus the *cross-process* cold start (DSE.md "Sharded sweeps and the
+persistent cache"): two fresh subprocesses share a campaign cache dir
+and each times the family build + compile + run from post-import.
+
+* ``family_cold_uncached`` — the first process: every executable is an
+  actual XLA compile (persistent-cache misses).
+* ``family_cold_cached``   — the second process: every executable
+  deserializes from the persistent compilation cache — **zero** misses,
+  and the ≥5x CI bar gates the wall-clock ratio against the uncached
+  run.
 """
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
 import time
 
 import jax
@@ -24,6 +41,50 @@ from repro.sims.memsys import build, build_family
 SHAPES = (1, 2, 4, 8)
 UNTIL = 50000.0
 N_REQS = 24
+
+_COLD_WORKER = textwrap.dedent("""
+    import json, time
+    import jax
+    # persistent-cache traffic: a miss is an actual XLA compile
+    from jax._src import monitoring
+    C = {"hits": 0, "misses": 0}
+    def _l(event):
+        if event == "/jax/compilation_cache/cache_hits":
+            C["hits"] += 1
+        elif event == "/jax/compilation_cache/cache_misses":
+            C["misses"] += 1
+    monitoring.register_event_listener(lambda e, **kw: _l(e))
+    from repro.dse import (BatchRunner, stack_params, stack_state_list,
+                           cache as dse_cache)
+    from repro.sims.memsys import build_family
+    assert dse_cache.active(), "REPRO_CACHE_DIR not picked up"
+    SHAPES, UNTIL, N_REQS = %r, %r, %r
+    t0 = time.perf_counter()
+    fam = build_family(n_cores=max(SHAPES), pattern="mixed",
+                       n_reqs=N_REQS, donate=True)
+    runner = BatchRunner(fam.sim)
+    pb = stack_params([fam.params_for({"core": s}) for s in SHAPES])
+    sb = stack_state_list([fam.state_for({"core": s}) for s in SHAPES])
+    out = runner.run_batch(sb, pb, UNTIL)
+    out.time.block_until_ready()
+    dt = time.perf_counter() - t0
+    print(json.dumps({"seconds": dt,
+                      "rows": [float(t) for t in out.time.tolist()],
+                      **C}))
+""") % (SHAPES, UNTIL, N_REQS)
+
+
+def _cold_run(cache_dir):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env["REPRO_CACHE_DIR"] = cache_dir
+    r = subprocess.run([sys.executable, "-c", _COLD_WORKER],
+                       capture_output=True, text=True, timeout=1800,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"cold-start worker failed: {r.stderr[-3000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def _family_batch(fam):
@@ -86,5 +147,38 @@ def bench():
                    f"[acceptance: >=5x rebuild]",
         "configs_per_sec": warm_cps,
         "speedup_vs_rebuild": warm_cps / base_cps,
+    })
+
+    # two-process persistent-cache cold start: same family workload,
+    # fresh interpreter each time, shared campaign cache dir
+    with tempfile.TemporaryDirectory(prefix="repro_cache_") as cdir:
+        uncached = _cold_run(cdir)
+        cached = _cold_run(cdir)
+    if cached["rows"] != uncached["rows"]:
+        raise RuntimeError(
+            f"cached cold start changed rows: {cached['rows']} "
+            f"vs {uncached['rows']}")
+    speedup = uncached["seconds"] / cached["seconds"]
+    rows.append({
+        "name": "struct_sweep/family_cold_uncached",
+        "us_per_call": uncached["seconds"] * 1e6,
+        "derived": f"{uncached['seconds']:.2f} s fresh-process family "
+                   f"build+compile+run ({uncached['misses']} XLA "
+                   f"compiles persisted)",
+        "seconds": uncached["seconds"],
+        "compile_cache_misses": uncached["misses"],
+        "compile_cache_hits": uncached["hits"],
+    })
+    rows.append({
+        "name": "struct_sweep/family_cold_cached",
+        "us_per_call": cached["seconds"] * 1e6,
+        "derived": f"{cached['seconds']:.2f} s second-process cold start "
+                   f"({speedup:.1f}x faster, {cached['misses']} compiles, "
+                   f"{cached['hits']} persistent-cache hits) "
+                   f"[acceptance: >=5x uncached, zero compiles]",
+        "seconds": cached["seconds"],
+        "compile_cache_misses": cached["misses"],
+        "compile_cache_hits": cached["hits"],
+        "speedup_vs_uncached": speedup,
     })
     return rows

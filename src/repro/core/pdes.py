@@ -51,6 +51,31 @@ from .ports import EPS
 
 REMOTE_KIND = "_remote"
 
+LANE_AXIS = "lanes"          # the batched-DSE mesh axis (config lanes)
+
+_MESHES: dict[tuple[int, str], Mesh] = {}
+
+
+def lane_mesh(n_devices: int | None = None, axis: str = LANE_AXIS) -> Mesh:
+    """A cached 1-D device mesh over the first ``n_devices`` local
+    devices (all of them by default).
+
+    This is the shared mesh machinery for every ``shard_map`` user in
+    the repo: the PDES component-axis shards (:class:`ShardedSim`) and
+    the DSE config-axis shards (``repro.dse`` sharded sweep rounds) both
+    draw their meshes here, so one process holds exactly one ``Mesh``
+    object per (device count, axis name) — meshes are part of jit cache
+    keys, and a fresh ``Mesh`` per call would defeat executable reuse.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else max(1, min(int(n_devices),
+                                                       len(devs)))
+    key = (n, axis)
+    m = _MESHES.get(key)
+    if m is None:
+        m = _MESHES[key] = Mesh(np.array(devs[:n]), (axis,))
+    return m
+
 
 def _gateway_tick(state, ports, t):
     # The gateway never ticks; the PDES wrapper moves its buffers directly.
@@ -94,8 +119,7 @@ class ShardedSim:
         self.mailbox = int(mailbox)
         self.axis = axis
         if mesh is None:
-            dev = np.array(jax.devices()[:1]).reshape(1)
-            mesh = Mesh(dev, (axis,))
+            mesh = lane_mesh(1, axis)
         self.mesh = mesh
         ki = [i for i, k in enumerate(self.sim.kinds)
               if k.name == REMOTE_KIND]

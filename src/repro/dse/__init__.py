@@ -16,9 +16,14 @@ sweep subsystem:
     ``vmap`` of the fused hot loop simulates hundreds of configs at once
     with *per-lane horizons* (``until`` / ``max_epochs`` are traced
     per-lane operands); ``run_rounds`` streams arbitrary B straggler-free
-    through rounds + lane compaction (optionally pmapped over devices);
-    shape axes lower to mask batches grouped per family, not compile
-    groups;
+    through rounds + lane compaction (optionally ``shard_map``-sharded
+    over a device mesh with globally-rebalanced compaction); shape axes
+    lower to mask batches grouped per family, not compile groups;
+  * :mod:`~repro.dse.cache` — the campaign cache: the jax persistent
+    compilation cache (enabled on first sweep when a cache dir is
+    configured) plus a cross-process artifact store for the autotuned
+    rung, warm-ladder rung sets and family shape unions, so the second
+    process of a campaign compiles nothing;
   * :mod:`~repro.dse.schedule` — the chunk ladder, epoch-quantum policy
     and the one-shot chunk-size autotuner behind ``run_rounds``;
   * :mod:`~repro.dse.report` — tidy rows, ``dominates`` /
@@ -33,6 +38,8 @@ masked family lane is bit-identical on active rows to an unpadded build
 of its shape — the invariants that make sweep results trustworthy
 (tests/dse).
 """
+from . import cache
+from .cache import configure as configure_cache
 from .family import TopologyFamily
 from .report import (dominates, format_table, pareto_front, score_vector,
                      tidy, to_csv, to_json)
@@ -49,6 +56,7 @@ from .sweep import (SweepSpec, apply_point, axis_error, build_param_batch,
                     split_shape, stack_params, valid_axes)
 
 __all__ = [
+    "cache", "configure_cache",
     "SweepSpec", "apply_point", "axis_error", "valid_axes",
     "build_param_batch", "stack_params", "split_shape", "TopologyFamily",
     "BatchRunner", "run_sweep", "stack_states", "stack_state_list", "lane",

@@ -26,9 +26,26 @@ Execution strategies, cheapest lane-waste first:
   slabs (no mid-run compaction); the final partial slab is padded with
   *zero-horizon* lanes that freeze on entry instead of re-simulating the
   repeated tail point.
-* **Sharding** — ``shard=True`` pmaps a batch over local devices (the
-  config axis is embarrassingly parallel); with one device this is the
-  plain vmap path.  Multi-host sharding is future work (ROADMAP).
+* **Sharding** — ``shard=True`` (or ``shard=<n devices>``) lays the
+  batch out as ``[shards, chunk]`` lanes over an explicit 1-D device
+  mesh (``core.pdes.lane_mesh``) and runs **one** ``shard_map``-of-vmap
+  executable across the whole mesh per round; with one device this is
+  the plain vmap path and results are bit-identical either way (lanes
+  are independent — a mesh only changes where each lane's arithmetic
+  runs).  Batches that don't divide the device count are padded with
+  zero-horizon lanes (freeze on entry) instead of shrinking to a
+  divisor, so every device stays busy at any B.  Under ``run_rounds``
+  the harvest/compact/refill step is *global*: survivors from all
+  shards pool on the host and re-pack across shards each round, so a
+  shard that drains early picks up its neighbours' pending lanes
+  instead of idling (``shard.rebalance`` telemetry counts the moves).
+
+Cold-start cost is covered by ``repro.dse.cache`` (DSE.md "Sharded
+sweeps and the persistent cache"): ``run_sweep`` enables the jax
+persistent compilation cache on entry when a cache dir is configured,
+and the runner persists its own warm-start artifacts (autotuned rung,
+warm-ladder rung set, family shape unions) so a fresh process repeats a
+previous process's executable requests exactly.
 * **Donation** — batched states are donated into the loop exactly like
   the unbatched engine (build knob ``donate=``); ``stack_states``
   materializes fresh per-lane copies so no lane aliases another lane or
@@ -48,9 +65,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core import SimParams, SimState, check_not_consumed
+from repro.core.pdes import LANE_AXIS, _SM_KW, lane_mesh, shard_map_compat
 from repro.obs.bus import BUS
 
+from . import cache as dse_cache
 from .family import TopologyFamily
 from .schedule import ChunkSchedule, ChunkAutotuner, auto_schedule
 from .sweep import (STATIC_PREFIX, SweepSpec, apply_point,
@@ -186,6 +207,23 @@ def _vec(x, b: int, dtype) -> jax.Array:
     return jnp.asarray(np.ascontiguousarray(a))
 
 
+def _shard_devices(shard) -> int:
+    """Normalize a ``shard`` argument (bool or device count) to the
+    number of mesh devices to span: ``False``/``0`` → 1 (plain vmap),
+    ``True`` → every local device, an int → that many (clamped to what
+    the host actually has, never below 1)."""
+    if shard is True:
+        return jax.local_device_count()
+    if not shard:
+        return 1
+    return max(1, min(int(shard), jax.local_device_count()))
+
+
+def _align_up(n: int, d: int) -> int:
+    """``n`` rounded up to a multiple of ``d``."""
+    return -(-int(n) // int(d)) * int(d)
+
+
 def _horizons(until, max_epochs, b: int) -> tuple[np.ndarray, np.ndarray]:
     """Normalize scalar-or-per-lane horizons to host vectors: [b] f32
     ``until`` and [b] i32 ``max_epochs`` (budgets beyond int32 clamp —
@@ -201,54 +239,78 @@ def _horizons(until, max_epochs, b: int) -> tuple[np.ndarray, np.ndarray]:
 class BatchRunner:
     """Compiled batched runs over one :class:`Simulation`'s design space.
 
-    Jitted executables are cached per (batch size, shard) — the horizon
-    and epoch budget are traced per-lane operands, so neither ``until``
-    nor ``max_epochs`` keys the cache and chunk-ladder rounds never
-    recompile after warmup.  ``trace_count`` counts actual retraces
-    (each jit compile runs the wrapped python once) and is pinned by
-    ``tests/dse/test_rounds.py``.
+    Jitted executables are cached per (batch size, shard topology) — the
+    horizon and epoch budget are traced per-lane operands, so neither
+    ``until`` nor ``max_epochs`` keys the cache and chunk-ladder rounds
+    never recompile after warmup.  ``trace_count`` counts actual
+    retraces (each jit compile runs the wrapped python once) and is
+    pinned by ``tests/dse/test_rounds.py``.
     """
 
     def __init__(self, sim):
         self.sim = sim
         self._fns: dict[tuple, Callable] = {}
         self.trace_count = 0          # python re-traces == XLA compiles
-        self._tuned_top: dict[bool, int] = {}   # shard -> autotuned rung
+        # devices -> autotuned rung: the winning chunk depends on the
+        # shard topology (per-device width is C/d), so a runner reused
+        # under a different mesh must not inherit a stale rung
+        self._tuned_top: dict[int, int] = {}
         self.last_rounds: dict | None = None    # diagnostics of last run
+        self.last_shard = 1           # devices the last run_batch spanned
 
     # ------------------------------------------------------------------
-    def _batched_fn(self, b: int, shard: bool):
-        key = (b, shard)
+    def _batched_fn(self, b: int, d: int):
+        """The compiled batched run for batch size ``b`` spanning ``d``
+        mesh devices.  ``d == 1`` is the plain jitted vmap; ``d > 1``
+        wraps the same vmap in ``shard_map`` over the shared lane mesh
+        (``core.pdes.lane_mesh``) — lanes lay out as ``[d, b/d]``, one
+        executable runs across the whole mesh, and because lanes are
+        independent under vmap the rows are bit-identical to the
+        single-device path.  ``b`` must be a multiple of ``d`` (callers
+        pad with zero-horizon lanes — see :meth:`run_batch`)."""
+        key = (b, d)
         fn = self._fns.get(key)
         if fn is not None:
             return fn
         sim = self.sim
+        if dse_cache.active():
+            # whole-executable rehydrate: the persisted binary skips
+            # trace + lower + compile entirely (bit-identical results —
+            # it IS the executable a fresh compile would produce)
+            loaded = dse_cache.get_executable(sim, b, d)
+            if loaded is not None:
+                self._fns[key] = loaded
+                return loaded
 
         def one(s, p, u, m):
             self.trace_count += 1     # runs only while (re)tracing
             return sim._run(s, u, m, params=p)
 
         vm = jax.vmap(one, in_axes=(0, 0, 0, 0))
-        if shard and jax.local_device_count() > 1:
-            d = jax.local_device_count()
-            while b % d:
-                d -= 1            # largest divisor of B we can pmap over
-
-            pm = jax.pmap(vm, in_axes=(0, 0, 0, 0),
-                          donate_argnums=(0,) if sim.donate else ())
-
-            def fn(sb, pb, u, m, d=d):
-                # the per-device reshaped copy is what gets donated here —
-                # callers must still treat sb as consumed, but its leaves
-                # may not be observably deleted on the pmap path
-                fold = lambda x: x.reshape((d, b // d) + x.shape[1:])
-                unfold = lambda x: x.reshape((b,) + x.shape[2:])
-                out = pm(jax.tree.map(fold, sb), jax.tree.map(fold, pb),
-                         fold(u), fold(m))
-                return jax.tree.map(unfold, out)
+        if d > 1:
+            assert b % d == 0, (b, d)
+            # one program over the whole mesh: each device traces the
+            # same vmap over its b/d local lanes (SPMD — the DSE config
+            # axis is embarrassingly parallel, so no collectives)
+            sm = shard_map_compat(
+                vm, mesh=lane_mesh(d),
+                in_specs=(P(LANE_AXIS),) * 4, out_specs=P(LANE_AXIS),
+                **_SM_KW)
+            fn = jax.jit(sm, donate_argnums=(0,) if sim.donate else ())
         else:
             fn = jax.jit(
                 vm, donate_argnums=(0,) if sim.donate else ())
+        if dse_cache.active():
+            target, runner = fn, self
+
+            def fn(s, p, u, m):
+                # AOT on first call so the compiled object is in hand
+                # to persist; lowering runs the python (same trace as
+                # the lazy jit path — trace_count telemetry holds)
+                compiled = target.lower(s, p, u, m).compile()
+                dse_cache.put_executable(sim, b, d, compiled)
+                runner._fns[key] = compiled
+                return compiled(s, p, u, m)
         self._fns[key] = fn
         return fn
 
@@ -290,7 +352,7 @@ class BatchRunner:
     # ------------------------------------------------------------------
     def run_batch(self, states_b: SimState, params_b: SimParams,
                   until, max_epochs=2_000_000,
-                  shard: bool = False) -> SimState:
+                  shard: "bool | int" = False) -> SimState:
         """One vmapped jitted run of a pre-stacked batch.
 
         ``until`` and ``max_epochs`` may be scalars (shared by every
@@ -298,6 +360,14 @@ class BatchRunner:
         bit-exactly at its own horizon / budget (stragglers excepted,
         the loop still *iterates* until the slowest lane is done; use
         :meth:`run_rounds` to reclaim that waste).
+
+        ``shard`` spans the lane mesh: ``True`` means every local
+        device, an int pins the count.  A batch that doesn't divide the
+        device count is padded to the next multiple by repeating the
+        last lane at **zero horizon and zero budget** (it freezes on
+        entry, exactly like chunk padding) and the padding rows are
+        sliced off the result — every device runs ``ceil(B/d)`` lanes
+        instead of silently falling back to a divisor of B.
 
         ``states_b`` is donated when the simulation was built with
         ``donate=True`` — treat it as consumed (see ``stack_states`` /
@@ -307,28 +377,40 @@ class BatchRunner:
         if self.sim.donate:
             check_not_consumed(states_b)
         b = int(params_b.conn_latency.shape[0])
-        fn = self._batched_fn(b, shard)
+        d = _shard_devices(shard)
+        self.last_shard = d
         u, m = _horizons(until, max_epochs, b)
+        pad = _align_up(b, d) - b
+        if pad:
+            grow = lambda x: jnp.concatenate([x] + [x[-1:]] * pad)
+            states_b = jax.tree.map(grow, states_b)
+            params_b = jax.tree.map(grow, params_b)
+            u = np.concatenate([u, np.zeros(pad, np.float32)])
+            m = np.concatenate([m, np.zeros(pad, np.int32)])
+        fn = self._batched_fn(b + pad, d)
+        trim = (lambda o: jax.tree.map(lambda x: x[:b], o)) if pad \
+            else (lambda o: o)
         if not BUS.active:
-            return fn(states_b, params_b, jnp.asarray(u), jnp.asarray(m))
+            return trim(fn(states_b, params_b, jnp.asarray(u),
+                           jnp.asarray(m)))
         # telemetry: a trace_count bump across this (host-side) dispatch
         # means XLA traced+compiled a fresh executable inside the call
         tc0 = self.trace_count
         t0 = time.perf_counter()
         out = fn(states_b, params_b, jnp.asarray(u), jnp.asarray(m))
         if self.trace_count > tc0:
-            BUS.emit("compile", what="run", b=b, shard=bool(shard),
+            BUS.emit("compile", what="run", b=b + pad, shard=d,
                      n=self.trace_count - tc0,
                      dur=time.perf_counter() - t0)
             BUS.count("dse.compiles", self.trace_count - tc0)
-        return out
+        return trim(out)
 
     # ------------------------------------------------------------------
     def run_chunked(self, template: SimState | Sequence[SimState],
                     params_b: SimParams, until,
                     chunk: int | None = None,
                     max_epochs=2_000_000,
-                    shard: bool = False) -> SimState:
+                    shard: "bool | int" = False) -> SimState:
         """Run a B-point batch in fixed-size chunks of fresh state stacks.
 
         ``template`` is either one ``SimState`` (every lane starts from a
@@ -376,7 +458,7 @@ class BatchRunner:
     # ------------------------------------------------------------------
     def warm_ladder(self, template: SimState | Sequence[SimState],
                     params_b: SimParams, sizes: Sequence[int],
-                    shard: bool = False) -> None:
+                    shard: "bool | int" = False) -> None:
         """Compile the run + liveness executables for the given batch
         sizes without advancing any lane: a zero-horizon, zero-budget
         batch traces and compiles the full program but executes no
@@ -386,8 +468,14 @@ class BatchRunner:
         if self.sim.donate:
             check_not_consumed(t)
         for b in sizes:
-            row0 = jnp.zeros((b,), jnp.int32)
-            pb = jax.tree.map(lambda x: x[row0], params_b)
+            # host-side row replication, not a device gather: warming
+            # must request exactly the executables the round loop will
+            # run — an extra tiny gather program here would miss (and so
+            # pollute) the persistent compilation cache on warm starts
+            pb = jax.tree.map(
+                lambda x: jnp.asarray(
+                    np.broadcast_to(np.asarray(x)[:1],
+                                    (b,) + np.shape(x)[1:])), params_b)
             out = self.run_batch(stack_states(t, b), pb, 0.0, 0, shard)
             self._liveness(out, np.zeros(b, np.float32),
                            np.zeros(b, np.int32))
@@ -397,7 +485,7 @@ class BatchRunner:
                    params_b: SimParams, until,
                    schedule: ChunkSchedule | None = None,
                    max_epochs=2_000_000,
-                   shard: bool = False,
+                   shard: "bool | int" = False,
                    init_epochs=None) -> SimState:
         """Straggler-free streaming run: rounds + lane compaction + the
         chunk ladder (DSE.md "Rounds and the chunk ladder").
@@ -412,10 +500,22 @@ class BatchRunner:
         full-batch :meth:`run_batch` at per-lane ``until`` — rounds only
         change wall-clock (pinned by ``tests/dse/test_rounds.py``).
 
+        Under ``shard`` the round batch spans the lane mesh as
+        ``[d, C/d]`` and the compact/refill step is **global**: the
+        survivor pool is one host-side queue across all shards, so each
+        round re-packs live lanes over the whole mesh and a shard whose
+        lanes drained early picks up its neighbours' pending work
+        instead of idling (the per-round ``shard.rebalance`` event
+        counts lanes that changed shard).  Ladder rungs align up to
+        multiples of ``d`` so every device runs the same lane count.
+
         ``schedule`` defaults to :func:`~repro.dse.schedule.auto_schedule`
         — with a one-shot chunk autotune for large B whose winning rung
-        is cached on this runner, so later calls skip the probe.
-        Returns the stacked final states in point order.
+        is cached on this runner (and, when a campaign cache dir is
+        configured, persisted via ``repro.dse.cache`` keyed on the sim
+        signature + shard topology, so a *fresh process* also skips the
+        probe and asks for exactly the executables a previous process
+        compiled).  Returns the stacked final states in point order.
 
         ``init_epochs`` (scalar or per-lane) is the epoch count already
         recorded in each lane's *initial* state — warm resumes pass the
@@ -432,13 +532,35 @@ class BatchRunner:
             for t in (template if per_lane else [template]):  # mid-round
                 check_not_consumed(t)
         u, budget = _horizons(until, max_epochs, B)
-        if schedule is None:
-            schedule = auto_schedule(B)
-            tuned = self._tuned_top.get(shard)
+        d = _shard_devices(shard)
+        auto = schedule is None
+        schedule = auto_schedule(B) if auto else \
+            dataclasses.replace(schedule)              # never mutate input
+        if d > 1:
+            # align every rung up to a multiple of d — each round's batch
+            # lays out as [d, C/d], and an unaligned rung would pad every
+            # round; tuner/ladder bookkeeping all works in aligned units
+            schedule = dataclasses.replace(
+                schedule, ladder=tuple(sorted(
+                    {_align_up(r, d) for r in schedule.ladder},
+                    reverse=True)))
+        if auto:
+            tuned = self._tuned_top.get(d)
+            if tuned is None:
+                tuned = dse_cache.get_tuned_top(self.sim, d)
+                if tuned is not None:   # a previous process's winner
+                    self._tuned_top[d] = tuned
             if tuned is not None:
                 schedule = schedule.narrowed(tuned)
-        else:
-            schedule = dataclasses.replace(schedule)   # never mutate input
+        # with a persistent compilation cache, pre-warm the rungs a
+        # previous process used for this (sim, B, topology): compiles
+        # deserialize from disk in milliseconds instead of stalling the
+        # first rounds, and the endgame rung can never compile mid-drain
+        if dse_cache.active():
+            known = dse_cache.get_rung_set(self.sim, B, d) or []
+            cold = [r for r in known if (r, d) not in self._fns]
+            if cold:
+                self.warm_ladder(template, params_b, cold, shard=d)
 
         ep = np.broadcast_to(               # per-lane epochs so far
             np.asarray(0 if init_epochs is None else init_epochs,
@@ -450,10 +572,12 @@ class BatchRunner:
                  if schedule.autotune else None)
         pad_template = template[0] if per_lane else template
         n_rounds = 0
+        used_rungs: set[int] = set()
+        shard_of: dict[int, int] = {}   # config -> mesh slot last round
         if BUS.active:
             BUS.emit("rounds.start", B=B, per_lane=per_lane,
                      ladder=list(schedule.ladder),
-                     quantum=schedule.quantum, shard=bool(shard),
+                     quantum=schedule.quantum, shard=d,
                      autotune=bool(schedule.autotune))
 
         def fresh(ids):
@@ -474,7 +598,8 @@ class BatchRunner:
                                  rates={str(r): rate for r, rate
                                         in tuner.rates.items()})
                     schedule = schedule.narrowed(top)
-                    self._tuned_top[shard] = top
+                    self._tuned_top[d] = top
+                    dse_cache.put_tuned_top(self.sim, d, top)
                     tuner = None
             C = rung if rung is not None else schedule.size_for(remaining)
             # Endgame: once everything left fits the smallest rung there
@@ -528,9 +653,28 @@ class BatchRunner:
             m_vec = np.where(live_row, cap, 0).astype(np.int32)
             b_vec = np.where(live_row, budget[ridx], 0).astype(np.int32)
 
+            used_rungs.add(C)
             tele = BUS.active         # snapshot once per round
+            if tele and d > 1:
+                # global re-pack diagnostics: which mesh slot does each
+                # live config land on this round, vs where it ran last
+                # round — moved lanes are exactly the cross-shard
+                # rebalancing the pmap path couldn't do
+                per_dev = C // d
+                moved = n_live = 0
+                for j, i in enumerate(ids):
+                    if i < 0:
+                        continue
+                    n_live += 1
+                    slot = j // per_dev
+                    if i in shard_of and shard_of[i] != slot:
+                        moved += 1
+                    shard_of[i] = slot
+                BUS.emit("shard.rebalance", round=n_rounds, shards=d,
+                         moved=moved, lanes=n_live)
+                BUS.count("dse.shard.lanes_moved", moved)
             t0 = time.perf_counter()
-            out = self.run_batch(sb, pb, u_vec, m_vec, shard)
+            out = self.run_batch(sb, pb, u_vec, m_vec, d)
             live, ep_c = self._liveness(out, u_vec, b_vec)   # host sync
             dt = time.perf_counter() - t0
 
@@ -602,12 +746,15 @@ class BatchRunner:
             n_rounds += 1
 
         self.last_rounds = {"rounds": n_rounds, "chunk": schedule.top,
-                            "quantum": schedule.quantum,
+                            "quantum": schedule.quantum, "shard": d,
                             "trace_count": self.trace_count}
+        # remember which rungs this (sim, B, topology) actually compiled
+        # so the next process can pre-warm them from the persistent cache
+        dse_cache.put_rung_set(self.sim, B, d, used_rungs)
         if BUS.active:
             BUS.emit("rounds.end", B=B, rounds=n_rounds,
                      chunk=schedule.top, quantum=schedule.quantum,
-                     trace_count=self.trace_count)
+                     shard=d, trace_count=self.trace_count)
         # final assembly in point order: concat the finished segments
         # once, then one gather per leaf restores lane order
         all_ids = np.asarray([i for ids, _ in done for i in ids], np.int32)
@@ -656,7 +803,13 @@ def memoize_build(build_fn: Callable) -> Callable:
       round asking for a *smaller* maximum (survivors shrank) runs as
       masked lanes of the already-compiled family.  A request that
       exceeds the cache is rebuilt at the elementwise maximum of old and
-      new, so repeated growth converges to one family per group.
+      new, so repeated growth converges to one family per group.  When a
+      campaign cache dir is configured (``repro.dse.cache``) the union
+      also persists *across processes*, keyed on the build function +
+      static kwargs: a fresh process builds the family at the previous
+      process's final maximum in one shot, so its executable shapes
+      match the persistent compilation cache exactly instead of
+      re-walking the growth sequence.
 
     The wrapper forwards ``build_fn``'s signature (``functools.wraps``),
     so ``run_sweep``'s eager ``static.*`` kwarg validation still sees
@@ -686,8 +839,18 @@ def memoize_build(build_fn: Callable) -> Callable:
         if fam is not None:
             for a, v in fam.shape_max.items():
                 grown[a] = max(int(grown.get(a, 0)), int(v))
+        bkey = None
+        if dse_cache.active():        # cross-process union (same axes only
+            bkey = dse_cache.family_build_key(build_fn, args, kw)
+            persisted = dse_cache.get_family_shape(bkey)
+            if persisted:             # — a foreign axis would leak into
+                for a, v in persisted.items():   # the build signature)
+                    if a in grown:
+                        grown[a] = max(int(grown[a]), int(v))
         fam = build_fn(*args, **kw, shape=grown)
         cache[key] = fam
+        if bkey is not None:
+            dse_cache.put_family_shape(bkey, fam.shape_max)
         return fam
 
     wrapped._dse_memoized = True
@@ -711,7 +874,7 @@ def _static_kwarg_names(build_fn) -> list[str] | None:
 
 def run_sweep(build_fn: Callable, spec: SweepSpec, until,
               extract: Callable | None = None, chunk: int | None = None,
-              max_epochs: int = 2_000_000, shard: bool = False,
+              max_epochs: int = 2_000_000, shard: "bool | int" = False,
               schedule: ChunkSchedule | None = None,
               resume: Sequence[ResumeHandle | None] | None = None,
               return_states: bool = False):
@@ -734,6 +897,9 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
     ladder's top rung (otherwise large groups autotune it); ``schedule``
     overrides the whole policy.  ``until`` may be a scalar or a per-point
     sequence (mixed horizons — e.g. successive-halving search rounds).
+    ``shard=True`` (or a device count) spans each round over the lane
+    mesh with globally-rebalanced compaction — rows stay bit-identical
+    to the single-device path (:meth:`BatchRunner.run_rounds`).
 
     **Topology families** (``shape.*`` axes, DSE.md): shape axes sweep
     instance counts / wiring *without* forming compile groups.  The
@@ -768,6 +934,8 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
         raise ValueError(
             f"resume= must give one handle (or None) per point: "
             f"{len(resume)} != {len(spec)}")
+    dse_cache.ensure_enabled()       # enable-on-first-sweep: wire the
+    # persistent jax compilation cache when a campaign dir is configured
     rows: list[dict | None] = [None] * len(spec)
     lane_states = LaneStates() if return_states else None
     until_arr = np.broadcast_to(np.asarray(until, np.float32), (len(spec),))
@@ -776,7 +944,7 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
     sweep_t0 = time.perf_counter()
     if tele:
         BUS.emit("sweep.start", n_points=len(spec), axes=spec.summary(),
-                 shape_mode=bool(shape_mode), shard=bool(shard),
+                 shape_mode=bool(shape_mode), shard=_shard_devices(shard),
                  warm=(0 if resume is None
                        else sum(1 for h in resume if h is not None)))
         BUS.count("dse.sweeps")

@@ -44,7 +44,8 @@ import numpy as np
 from repro.obs.bus import BUS
 
 from ..report import MAX, MIN, pareto_front, score_vector, _dominates_scores
-from ..runner import LaneStates, ResumeHandle, memoize_build, run_sweep
+from ..runner import (LaneStates, ResumeHandle, _shard_devices,
+                      memoize_build, run_sweep)
 from ..schedule import ChunkSchedule
 from ..sweep import SweepSpec
 
@@ -379,7 +380,7 @@ def run_search(build_fn: Callable, driver: SearchDriver, *,
                max_epochs: int = 2_000_000,
                chunk: int | None = None,
                schedule: ChunkSchedule | None = None,
-               shard: bool = False,
+               shard: "bool | int" = False,
                callback: Callable | None = None) -> SearchResult:
     """Drive a closed-loop search: ``ask`` → round-based sweep → ``tell``
     until the driver finishes.
@@ -401,6 +402,7 @@ def run_search(build_fn: Callable, driver: SearchDriver, *,
         BUS.emit("search.start", driver=type(driver).__name__,
                  objective=driver.objective.objectives,
                  cycle_budget=driver.cycle_budget,
+                 shard=_shard_devices(shard),
                  resumed_round=driver.state.round)
     rounds = 0
     while True:

@@ -58,6 +58,9 @@ class CampaignStats:
                        "best": None, "done": False}
         self._tell_hist = collections.deque(maxlen=_RATE_WINDOW)
         self.promotions = []           # last few rung.promote payloads
+        self.cache = {"hits": 0, "misses": 0, "writes": 0,
+                      "bytes_read": 0, "bytes_written": 0, "dir": None}
+        self.shards = {"devices": 1, "rebalances": 0, "lanes_moved": 0}
 
     # ------------------------------------------------------------------
     def on_event(self, ev: dict) -> None:
@@ -106,6 +109,22 @@ class CampaignStats:
                                         "promoted", "dropped", "warm",
                                         "spent", "replay_cycles")})
             del self.promotions[:-8]
+        elif kind == "cache.hit":
+            self.cache["hits"] += 1
+            self.cache["bytes_read"] += int(ev.get("bytes", 0))
+        elif kind == "cache.miss":
+            self.cache["misses"] += 1
+        elif kind == "cache.write":
+            self.cache["writes"] += 1
+            self.cache["bytes_written"] += int(ev.get("bytes", 0))
+        elif kind == "cache.enable":
+            self.cache["dir"] = ev.get("dir")
+        elif kind == "shard.rebalance":
+            self.shards["devices"] = int(ev.get("shards", 1))
+            self.shards["rebalances"] += 1
+            self.shards["lanes_moved"] += int(ev.get("moved", 0))
+        elif kind == "rounds.start":
+            self.shards["devices"] = int(ev.get("shard", 1))
 
     @staticmethod
     def _rate(hist) -> float:
@@ -145,6 +164,13 @@ class CampaignStats:
                            "per_sec": cycles_per_sec},
                 "compiles": dict(self.compiles),
                 "transfers": dict(self.transfers),
+                "cache": dict(
+                    self.cache,
+                    hit_rate=(self.cache["hits"]
+                              / (self.cache["hits"] + self.cache["misses"])
+                              if self.cache["hits"] + self.cache["misses"]
+                              else None)),
+                "shards": dict(self.shards),
                 "search": dict(self.search),
                 "promotions": list(self.promotions),
             }

@@ -43,9 +43,11 @@ def test_shard_flag_runs_and_matches_plain_vmap():
 
 
 @pytest.mark.slow
-def test_shard_pmaps_over_multiple_devices():
-    """The pmap path (only reachable with >1 device, hence the subprocess
-    with forced host devices) must match plain vmap bit-for-bit."""
+def test_shard_maps_over_multiple_devices():
+    """The shard_map mesh path (only reachable with >1 device, hence the
+    subprocess with forced host devices) must match plain vmap
+    bit-for-bit.  tests/dse/test_sharded.py covers the rounds/sweep/
+    search layers and the non-divisible-batch padding on the same mesh."""
     root = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(root, "src")

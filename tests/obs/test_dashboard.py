@@ -58,6 +58,35 @@ def test_stats_aggregation_from_synthetic_events():
     assert st.snapshot()["search"]["best"] == {"x": 2}
 
 
+def test_cache_and_shard_sections_aggregate():
+    st = CampaignStats()
+    st.on_event({"kind": "cache.enable", "ts": 1.0, "seq": 0,
+                 "dir": "/tmp/c", "jax": "0.4.37"})
+    st.on_event({"kind": "cache.miss", "ts": 1.1, "seq": 1,
+                 "what": "tuned_top", "key": "k", "bytes": 0})
+    st.on_event({"kind": "cache.write", "ts": 1.2, "seq": 2,
+                 "what": "tuned_top", "key": "k", "bytes": 11})
+    st.on_event({"kind": "cache.hit", "ts": 1.3, "seq": 3,
+                 "what": "tuned_top", "key": "k", "bytes": 11})
+    st.on_event({"kind": "cache.hit", "ts": 1.4, "seq": 4,
+                 "what": "rungs", "key": "k2", "bytes": 7})
+    st.on_event({"kind": "rounds.start", "ts": 1.5, "seq": 5, "B": 64,
+                 "ladder": [32], "quantum": 128, "shard": 2,
+                 "per_lane": False, "autotune": False})
+    st.on_event({"kind": "shard.rebalance", "ts": 2.0, "seq": 6,
+                 "round": 3, "shards": 2, "moved": 5, "lanes": 30})
+    st.on_event({"kind": "shard.rebalance", "ts": 2.1, "seq": 7,
+                 "round": 4, "shards": 2, "moved": 2, "lanes": 28})
+    snap = st.snapshot()
+    c = snap["cache"]
+    assert c["hits"] == 2 and c["misses"] == 1 and c["writes"] == 1
+    assert c["hit_rate"] == pytest.approx(2 / 3)
+    assert c["bytes_read"] == 18 and c["bytes_written"] == 11
+    assert c["dir"] == "/tmp/c"
+    s = snap["shards"]
+    assert s == {"devices": 2, "rebalances": 2, "lanes_moved": 7}
+
+
 def test_unknown_kinds_only_bump_the_event_counter():
     st = CampaignStats()
     st.on_event({"kind": "totally.new", "ts": 1.0, "seq": 0})
