@@ -1,7 +1,11 @@
 """Design-space exploration throughput: configs/sec for straggler-free
 round-based sweeps at B ∈ {1, 8, 64, 256} versus sequential unbatched
 runs (memsys, mixed pattern), plus a straggler-heavy **mixed-horizon**
-B=256 case (per-lane ``until`` spread ~8x).
+B=256 case (per-lane ``until`` spread ~8x), the **pipelined vs
+alternating** round-loop comparison (depth-2 pipeline gated >=1.25x,
+bit-identity asserted in-benchmark) and a **two-job LaneMux** case
+(two half-size sweeps through one shared loop, rows identical to
+their solo runs).
 
 Batched rows run the ``run_rounds`` streaming path ``run_sweep`` uses:
 per-lane horizons, epoch-quantum rounds, lane compaction down the chunk
@@ -65,12 +69,12 @@ def _mixed_untils(b):
 TIMED_REPS = 2      # best-of-N timing (the CI box is noisy)
 
 
-def _timed_rounds(runner, st, pb, until, reps=TIMED_REPS):
+def _timed_rounds(runner, st, pb, until, reps=TIMED_REPS, pipeline=None):
     """Best-of-N timed ``run_rounds`` sweeps (executables pre-warmed)."""
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        out = runner.run_rounds(st, pb, until)
+        out = runner.run_rounds(st, pb, until, pipeline=pipeline)
         out.time.block_until_ready()
         best = min(best, time.perf_counter() - t0)
     return best
@@ -232,5 +236,102 @@ def bench(n_cores=N_CORES, n_reqs=N_REQS):
         "rounds": runner.last_rounds["rounds"],
         "speedup_vs_sequential": cps / rebuild_mixed_cps,
         "speedup_vs_sharedjit": cps / shared_mixed_cps,
+    })
+
+    # ------------------------------------------------------------------
+    # round pipelining: the same mixed-horizon drain with the strictly
+    # alternating loop (pipeline=False — the pre-pipelining round loop)
+    # vs the depth-2 pipeline, back to back on the same warm
+    # executables, with the bit-identity contract asserted in-benchmark
+    # ------------------------------------------------------------------
+    seq_out = runner.run_rounds(st, pb, u, pipeline=False)
+    piped_out = runner.run_rounds(st, pb, u)
+    for x, y in zip(jax.tree.leaves(seq_out), jax.tree.leaves(piped_out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    dt_alt = _timed_rounds(runner, st, pb, u, pipeline=False)
+    alt_cps = b / dt_alt
+    rows.append({
+        "name": f"dse_throughput/B{MIXED_B}_mixed_roundloop",
+        "us_per_call": dt_alt * 1e6,
+        "derived": f"{alt_cps:.1f} configs/s (pipeline=False: the "
+                   f"strictly-alternating round loop — the pipelining "
+                   f"baseline)",
+        "configs_per_sec": alt_cps,
+        "rounds": runner.last_rounds["rounds"],
+    })
+    dt_pip = _timed_rounds(runner, st, pb, u)
+    pip_cps = b / dt_pip
+    lr = runner.last_rounds
+    rows.append({
+        "name": f"dse_throughput/B{MIXED_B}_mixed_pipelined",
+        "us_per_call": dt_pip * 1e6,
+        "derived": f"{pip_cps:.1f} configs/s "
+                   f"({pip_cps / alt_cps:.2f}x the alternating round "
+                   f"loop, chunk {lr['chunk']}, depth {lr['pipeline']}, "
+                   f"bit-identical rows) "
+                   f"[acceptance: >=1.25x round loop]",
+        "configs_per_sec": pip_cps,
+        "chunk": lr["chunk"],
+        "rounds": lr["rounds"],
+        "pipeline": lr["pipeline"],
+        "overlap_frac": lr["overlap_frac"],
+        "speedup_vs_roundloop": pip_cps / alt_cps,
+        "bit_identical": True,
+    })
+
+    # ------------------------------------------------------------------
+    # two-job multiplexing: two concurrent half-size mixed-horizon
+    # sweeps through one shared round loop (LaneMux) vs running them
+    # solo back to back — rows must match the solo runs exactly
+    # ------------------------------------------------------------------
+    from repro.dse import LaneMux, SweepSpec, memoize_build, run_sweep
+
+    def _mux_build():
+        return build(n_cores=n_cores, pattern="mixed", n_reqs=n_reqs,
+                     donate=True)
+
+    mb = memoize_build(_mux_build)
+    pts_all = _points(MIXED_B)
+    u_all = _mixed_untils(MIXED_B)
+    spec_a = SweepSpec.explicit(pts_all[0::2])
+    spec_b = SweepSpec.explicit(pts_all[1::2])
+    u_a, u_b = u_all[0::2], u_all[1::2]
+
+    def solo():
+        return (run_sweep(mb, spec_a, u_a),
+                run_sweep(mb, spec_b, u_b))
+
+    def muxed():
+        m = LaneMux()
+        m.submit("a", mb, spec_a, u_a)
+        m.submit("b", mb, spec_b, u_b)
+        got = m.run()
+        return got["a"], got["b"]
+
+    solo_rows = solo()                      # warm (B=128 rungs)
+    mux_rows = muxed()
+    rows_identical = solo_rows == mux_rows  # byte-for-byte row equality
+    dt_solo = dt_mux = float("inf")
+    for _ in range(TIMED_REPS):
+        t0 = time.perf_counter()
+        solo()
+        dt_solo = min(dt_solo, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        muxed()
+        dt_mux = min(dt_mux, time.perf_counter() - t0)
+    solo_cps = MIXED_B / dt_solo
+    mux_cps = MIXED_B / dt_mux
+    rows.append({
+        "name": f"dse_throughput/two_job_mux_B{MIXED_B // 2}x2",
+        "us_per_call": dt_mux * 1e6,
+        "derived": f"{mux_cps:.1f} configs/s muxed vs {solo_cps:.1f} "
+                   f"solo back-to-back ({mux_cps / solo_cps:.2f}x; "
+                   f"rows identical: {rows_identical}) "
+                   f"[acceptance: rows identical, >=1.0x solo]",
+        "configs_per_sec": mux_cps,
+        "solo_configs_per_sec": solo_cps,
+        "speedup_vs_solo": mux_cps / solo_cps,
+        "rows_identical": bool(rows_identical),
     })
     return rows

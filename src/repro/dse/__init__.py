@@ -19,6 +19,10 @@ sweep subsystem:
     through rounds + lane compaction (optionally ``shard_map``-sharded
     over a device mesh with globally-rebalanced compaction); shape axes
     lower to mask batches grouped per family, not compile groups;
+  * :mod:`~repro.dse.mux` — ``LaneMux``: multiplex lanes from several
+    concurrent sweep jobs into shared round batches with fair
+    round-robin refill and per-job row routing — half-full campaigns
+    share rungs and executables instead of underfilling their own;
   * :mod:`~repro.dse.cache` — the campaign cache: the jax persistent
     compilation cache (enabled on first sweep when a cache dir is
     configured) plus a cross-process artifact store for the autotuned
@@ -41,6 +45,7 @@ of its shape — the invariants that make sweep results trustworthy
 from . import cache
 from .cache import configure as configure_cache
 from .family import TopologyFamily
+from .mux import LaneMux, MuxJob
 from .report import (dominates, format_table, pareto_front, score_vector,
                      tidy, to_csv, to_json)
 from .runner import (BatchRunner, LaneStates, ResumeHandle,
@@ -61,7 +66,7 @@ __all__ = [
     "build_param_batch", "stack_params", "split_shape", "TopologyFamily",
     "BatchRunner", "run_sweep", "stack_states", "stack_state_list", "lane",
     "default_extract", "extract_rows", "runner_for", "memoize_build",
-    "ResumeHandle", "LaneStates",
+    "ResumeHandle", "LaneStates", "LaneMux", "MuxJob",
     "ChunkSchedule", "ChunkAutotuner", "auto_schedule", "make_ladder",
     "SearchDriver", "SearchState", "SearchResult", "Objective",
     "run_search", "SuccessiveHalving", "horizon_ladder", "BatchBO",

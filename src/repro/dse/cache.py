@@ -51,6 +51,13 @@ Every lookup emits ``cache.hit`` / ``cache.miss`` (and writes emit
 ``dse.cache.hit_rate`` gauge the ``/campaign`` dashboard surfaces —
 a campaign that silently misses its cache is a perf bug worth seeing.
 
+The directory is size-capped: :func:`gc` evicts least-recently-used
+files (executable hits bump mtime) down to ``REPRO_CACHE_MAX_BYTES`` /
+``configure(max_bytes=...)``, emitting ``cache.evict`` per file — so a
+long-lived shared cache dir serves many campaigns without growing
+forever.  The artifact store itself is never evicted (a few KB of
+decisions whose loss would cost a re-probe).
+
 Nothing here is load-bearing for correctness: with no cache dir
 configured every function is a cheap no-op, artifacts only shortcut
 decisions that would otherwise be re-derived, and a corrupt or
@@ -72,6 +79,7 @@ import jax
 from repro.obs.bus import BUS
 
 ENV_DIR = "REPRO_CACHE_DIR"
+ENV_MAX_BYTES = "REPRO_CACHE_MAX_BYTES"
 
 # Bump when the artifact semantics change (keys embed it, so old stores
 # simply stop matching instead of poisoning new processes).
@@ -80,9 +88,9 @@ CACHE_VERSION = 1
 STORE_NAME = "repro_dse_artifacts.json"
 
 _lock = threading.Lock()
-_cfg: dict = {"dir": None, "jax_enabled": False}
+_cfg: dict = {"dir": None, "jax_enabled": False, "max_bytes": None}
 _store: "DseCache | None" = None
-_counts = {"hits": 0, "misses": 0, "writes": 0}
+_counts = {"hits": 0, "misses": 0, "writes": 0, "evictions": 0}
 
 _SIM_SIGS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
@@ -90,23 +98,44 @@ _SIM_SIGS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 # ---------------------------------------------------------------------------
 # configuration
 # ---------------------------------------------------------------------------
-def configure(cache_dir: str | None) -> None:
+def configure(cache_dir: str | None,
+              max_bytes: int | None = None) -> None:
     """Set (or clear, with ``None``) the campaign cache directory.
 
     Precedence: an explicit ``configure()`` beats the ``REPRO_CACHE_DIR``
     environment variable.  The jax compilation cache is wired lazily by
     :func:`ensure_enabled` (``run_sweep`` calls it on entry), so merely
     configuring a directory costs nothing.
+
+    ``max_bytes`` caps the cache directory's total size: when a write
+    pushes it over, :func:`gc` evicts least-recently-used files until it
+    fits (``None`` falls back to the ``REPRO_CACHE_MAX_BYTES``
+    environment variable; with neither set the cache grows unbounded).
+    Each ``configure()`` call resets the cap, so a test that sets one
+    cannot leak it into the next.
     """
     global _store
     with _lock:
         _cfg["dir"] = cache_dir
+        _cfg["max_bytes"] = None if max_bytes is None else int(max_bytes)
         _store = None
 
 
 def cache_dir() -> str | None:
     """The effective cache directory, or ``None`` when caching is off."""
     return _cfg["dir"] or os.environ.get(ENV_DIR) or None
+
+
+def max_cache_bytes() -> int | None:
+    """The effective size cap for :func:`gc`, or ``None`` (unbounded).
+    ``configure(max_bytes=...)`` beats ``REPRO_CACHE_MAX_BYTES``."""
+    if _cfg["max_bytes"] is not None:
+        return int(_cfg["max_bytes"])
+    env = os.environ.get(ENV_MAX_BYTES)
+    try:
+        return int(env) if env else None
+    except ValueError:
+        return None
 
 
 def active() -> bool:
@@ -154,6 +183,7 @@ def ensure_enabled() -> bool:
         _cfg["jax_enabled"] = True
     if BUS.active:
         BUS.emit("cache.enable", dir=d, jax=jax.__version__)
+    gc()     # shrink a pre-existing over-cap dir at startup, not mid-sweep
     return True
 
 
@@ -182,6 +212,71 @@ def _note(kind: str, key: str, hit: bool, nbytes: int = 0) -> None:
         BUS.count("dse.cache.hits" if hit else "dse.cache.misses")
         seen = _counts["hits"] + _counts["misses"]
         BUS.gauge("dse.cache.hit_rate", _counts["hits"] / seen)
+
+
+# ---------------------------------------------------------------------------
+# size-capped LRU GC
+# ---------------------------------------------------------------------------
+def gc(limit: int | None = None) -> int:
+    """Evict least-recently-used cache files until the directory fits
+    the size cap; returns the number of files evicted.
+
+    Candidates are every file under the cache dir — AOT executable
+    blobs (``exec_*.bin``) and the jax compilation-cache entries —
+    *except* the artifact store (:data:`STORE_NAME`, a few KB of
+    decisions that regenerating would cost a re-probe) and in-progress
+    temp files.  Recency is file mtime: :func:`get_executable` bumps it
+    on every hit, so a campaign's hot rung executables survive while a
+    long-dead topology's blobs age out.  ``limit`` overrides the
+    configured cap (:func:`max_cache_bytes`); with no cap (or no cache
+    dir) this is a no-op.  Every eviction emits a ``cache.evict`` event
+    and bumps ``dse.cache.evictions``; the post-GC directory size lands
+    on the ``dse.cache.bytes`` gauge.
+
+    Called automatically after every executable write (the only writes
+    big enough to matter) and once at :func:`ensure_enabled` — a
+    pre-existing over-cap directory shrinks at startup, not mid-sweep.
+    """
+    d = cache_dir()
+    cap = max_cache_bytes() if limit is None else int(limit)
+    if d is None or cap is None:
+        return 0
+    entries: list[tuple[int, int, str]] = []
+    total = 0
+    for root, _, files in os.walk(d):
+        for name in files:
+            if name == STORE_NAME or name.startswith(".dse_"):
+                continue
+            p = os.path.join(root, name)
+            try:
+                st = os.stat(p)
+            except OSError:
+                continue
+            entries.append((st.st_mtime_ns, st.st_size, p))
+            total += st.st_size
+    if BUS.active:
+        BUS.gauge("dse.cache.bytes", total)
+    if total <= cap:
+        return 0
+    evicted = 0
+    freed = 0
+    for _, size, p in sorted(entries):        # oldest mtime first
+        if total - freed <= cap:
+            break
+        try:
+            os.unlink(p)
+        except OSError:                       # raced another process
+            continue
+        freed += size
+        evicted += 1
+        _counts["evictions"] += 1
+        if BUS.active:
+            BUS.emit("cache.evict", path=os.path.relpath(p, d),
+                     bytes=size)
+            BUS.count("dse.cache.evictions")
+    if BUS.active and evicted:
+        BUS.gauge("dse.cache.bytes", total - freed)
+    return evicted
 
 
 # ---------------------------------------------------------------------------
@@ -433,6 +528,10 @@ def get_executable(sim, b: int, devices: int):
     except Exception:
         _note("exec", key, False)
         return None
+    try:
+        os.utime(_exec_path(key))     # LRU recency: a hit is a touch
+    except OSError:
+        pass
     _note("exec", key, True, len(payload))
     return fn
 
@@ -465,3 +564,4 @@ def put_executable(sim, b: int, devices: int, compiled) -> None:
     if BUS.active:
         BUS.emit("cache.write", what="exec", key=key, bytes=len(payload))
         BUS.count("dse.cache.writes")
+    gc()          # keep the dir under the size cap as it grows

@@ -21,7 +21,12 @@ Execution strategies, cheapest lane-waste first:
   *slowest* lane's horizon — finished lanes burn full masked epochs — and
   large B can fall below sequential shared-jit throughput; rounds stream
   arbitrary B through a handful of cached executables (one per rung, zero
-  recompiles after warmup) at the autotuned batch width.
+  recompiles after warmup) at the autotuned batch width.  The loop is a
+  depth-2 software pipeline by default: round *k+1* is assembled and
+  dispatched while round *k* computes on device and its liveness copy
+  streams to host asynchronously, so host bookkeeping overlaps device
+  work (ENGINE_PERF.md "Round pipelining"; ``pipeline=False`` restores
+  the strictly alternating loop, bit-identically).
 * **Chunking** — ``run_chunked(chunk=...)`` splits B into fixed-size
   slabs (no mid-run compaction); the final partial slab is padded with
   *zero-horizon* lanes that freeze on entry instead of re-simulating the
@@ -54,6 +59,7 @@ previous process's executable requests exactly.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import inspect
@@ -314,10 +320,15 @@ class BatchRunner:
         self._fns[key] = fn
         return fn
 
-    def _liveness(self, out_b: SimState, u_vec, budget_vec):
-        """Per-lane ``(live, epochs)`` of a batched state, fetched to host
-        in one transfer.  ``live`` means the lane still has events before
-        its horizon and epoch budget — the round loop's compaction key."""
+    def _liveness_start(self, out_b: SimState, u_vec, budget_vec):
+        """Dispatch the per-lane ``(live, epochs)`` liveness program on a
+        batched state and *start* its device→host copy asynchronously
+        (``copy_to_host_async``) — the round loop's non-blocking half.
+        ``live`` means the lane still has events before its horizon and
+        epoch budget — the compaction key.  Returns an opaque pending
+        handle for :meth:`_liveness_read`; nothing here blocks on the
+        device, so the caller can keep dispatching (the next round's
+        step) while the transfer drains in the background."""
         b = int(out_b.time.shape[0])
         key = ("live", b)
         fn = self._fns.get(key)
@@ -330,23 +341,41 @@ class BatchRunner:
 
             fn = jax.jit(jax.vmap(one))
             self._fns[key] = fn
-        if not BUS.active:
-            live, ep = fn(out_b, _vec(u_vec, b, np.float32),
-                          _vec(budget_vec, b, np.int32))
-            return jax.device_get((live, ep))
         tc0 = self.trace_count
         t0 = time.perf_counter()
         live, ep = fn(out_b, _vec(u_vec, b, np.float32),
                       _vec(budget_vec, b, np.int32))
-        if self.trace_count > tc0:
+        if BUS.active and self.trace_count > tc0:
             BUS.emit("compile", what="liveness", b=b,
                      n=self.trace_count - tc0,
                      dur=time.perf_counter() - t0)
+        for a in (live, ep):
+            try:
+                a.copy_to_host_async()
+            except AttributeError:    # older jax array types: sync get
+                pass
+        return (live, ep, b)
+
+    def _liveness_read(self, pending):
+        """Blocking half of the liveness pull: materialize the vectors a
+        :meth:`_liveness_start` call put in flight.  Returns
+        ``((live, epochs), wait_s)`` — ``wait_s`` is the time spent
+        blocked here, which under pipelining is (near) zero because the
+        transfer ran while the host did round *k+1*'s work."""
+        live, ep, b = pending
         t0 = time.perf_counter()
         out = jax.device_get((live, ep))
         dt = time.perf_counter() - t0
-        BUS.emit("transfer", what="liveness", b=b, dur=dt)
-        BUS.observe("dse.transfer.liveness_s", dt)
+        if BUS.active:
+            BUS.emit("transfer", what="liveness", b=b, dur=dt)
+            BUS.observe("dse.transfer.liveness_s", dt)
+        return out, dt
+
+    def _liveness(self, out_b: SimState, u_vec, budget_vec):
+        """Dispatch + block: the one-shot liveness pull (warm-ladder and
+        compatibility callers; the round loop uses the split halves)."""
+        out, _ = self._liveness_read(
+            self._liveness_start(out_b, u_vec, budget_vec))
         return out
 
     # ------------------------------------------------------------------
@@ -486,7 +515,8 @@ class BatchRunner:
                    schedule: ChunkSchedule | None = None,
                    max_epochs=2_000_000,
                    shard: "bool | int" = False,
-                   init_epochs=None) -> SimState:
+                   init_epochs=None,
+                   pipeline: "bool | int | None" = None) -> SimState:
         """Straggler-free streaming run: rounds + lane compaction + the
         chunk ladder (DSE.md "Rounds and the chunk ladder").
 
@@ -499,6 +529,29 @@ class BatchRunner:
         horizons, so the result is **bit-identical** to a single
         full-batch :meth:`run_batch` at per-lane ``until`` — rounds only
         change wall-clock (pinned by ``tests/dse/test_rounds.py``).
+
+        **Pipelining** (``pipeline``, default on — ENGINE_PERF.md "Round
+        pipelining"): the loop is a depth-2 software pipeline.  Round
+        *k+1* is assembled from the survivor pool and the pending queue
+        and its device step + liveness program are *dispatched* before
+        the host blocks on round *k*'s liveness — whose device→host
+        copy was already started asynchronously at dispatch time
+        (:meth:`_liveness_start`) — so device compute and host-side
+        harvest/compact/refill overlap instead of alternating.  The two
+        in-flight rounds are disjoint lane sets in independent
+        donation-safe buffers (assembly always materializes fresh
+        buffers), rotated every round; because lanes are independent and
+        freeze bit-exactly at their own horizons, *which* round a lane
+        rides in never changes its result — pipelined rows are
+        bit-identical to the sequential loop's (pinned by
+        ``tests/dse/test_pipeline.py``).  The host only synchronizes on
+        a round when deciding its compaction — never to choose the next
+        dispatch's executable shape, which is sized from the lanes
+        already resolved.  ``pipeline=False`` (or ``1``) restores the
+        strictly-alternating loop; an int sets the depth explicitly.
+        Autotune probe rounds and the endgame run unpipelined (probes
+        need clean per-round timings; the endgame needs every lane
+        resolved).
 
         Under ``shard`` the round batch spans the lane mesh as
         ``[d, C/d]`` and the compact/refill step is **global**: the
@@ -562,6 +615,9 @@ class BatchRunner:
             if cold:
                 self.warm_ladder(template, params_b, cold, shard=d)
 
+        depth = (2 if pipeline is None or pipeline is True else
+                 1 if pipeline is False else max(1, int(pipeline)))
+
         ep = np.broadcast_to(               # per-lane epochs so far
             np.asarray(0 if init_epochs is None else init_epochs,
                        np.int64), (B,)).copy()
@@ -572,20 +628,32 @@ class BatchRunner:
                  if schedule.autotune else None)
         pad_template = template[0] if per_lane else template
         n_rounds = 0
+        n_dispatched = 0
+        host_accum = wait_accum = 0.0
         used_rungs: set[int] = set()
         shard_of: dict[int, int] = {}   # config -> mesh slot last round
         if BUS.active:
             BUS.emit("rounds.start", B=B, per_lane=per_lane,
                      ladder=list(schedule.ladder),
                      quantum=schedule.quantum, shard=d,
-                     autotune=bool(schedule.autotune))
+                     autotune=bool(schedule.autotune), pipeline=depth)
 
         def fresh(ids):
             if per_lane:
                 return stack_state_list([template[i] for i in ids])
             return stack_states(template, len(ids))
 
-        while pool or pending:
+        # two in-flight rounds, resolved FIFO; each entry is a dispatched
+        # round whose liveness copy is already streaming to host
+        inflight: "collections.deque" = collections.deque()
+
+        def dispatch():
+            """Assemble one round from the pool + pending queue and
+            enqueue its device step and async liveness pull.  Pure host
+            and dispatch work — never blocks on the device, so it runs
+            concurrently with the previous round's compute."""
+            nonlocal tuner, schedule, pending, n_dispatched
+            h0 = time.perf_counter()
             n_alive = sum(len(ids) for ids, _ in pool)
             remaining = n_alive + len(pending)
             rung = None
@@ -607,7 +675,10 @@ class BatchRunner:
             # quantum rounds would be pure overhead, so run to the full
             # budget in one round (this is also the whole story for
             # B <= the smallest rung: one round, monolithic-equivalent).
-            endgame = (tuner is None and remaining <= schedule.ladder[-1])
+            # Needs *every* lane resolved, so only when nothing is in
+            # flight (in-flight survivors may still need this rung).
+            endgame = (tuner is None and not inflight
+                       and remaining <= schedule.ladder[-1])
 
             # --- assemble the round's batch: survivors, refill, pad ----
             parts, ids = [], []
@@ -670,13 +741,30 @@ class BatchRunner:
                     if i in shard_of and shard_of[i] != slot:
                         moved += 1
                     shard_of[i] = slot
-                BUS.emit("shard.rebalance", round=n_rounds, shards=d,
+                BUS.emit("shard.rebalance", round=n_dispatched, shards=d,
                          moved=moved, lanes=n_live)
                 BUS.count("dse.shard.lanes_moved", moved)
             t0 = time.perf_counter()
             out = self.run_batch(sb, pb, u_vec, m_vec, d)
-            live, ep_c = self._liveness(out, u_vec, b_vec)   # host sync
-            dt = time.perf_counter() - t0
+            pend = self._liveness_start(out, u_vec, b_vec)
+            n_dispatched += 1
+            return {"ids": ids, "out": out, "pend": pend, "C": C,
+                    "rung": rung, "endgame": endgame,
+                    "live_row": live_row, "spawned": spawned,
+                    "round": n_dispatched - 1,
+                    "t_dispatch": t0, "host_s": t0 - h0}
+
+        def resolve(rec):
+            """Block on a dispatched round's liveness (the copy has been
+            streaming since dispatch), then harvest finished lanes and
+            compact survivors back into the pool."""
+            nonlocal n_rounds, host_accum, wait_accum
+            (live, ep_c), wait_s = self._liveness_read(rec["pend"])
+            dt = time.perf_counter() - rec["t_dispatch"]
+            h0 = time.perf_counter()
+            ids, out, C = rec["ids"], rec["out"], rec["C"]
+            live_row, spawned = rec["live_row"], rec["spawned"]
+            tele = BUS.active
 
             round_epochs = 0
             surv_rows, surv_ids = [], []
@@ -710,32 +798,41 @@ class BatchRunner:
                     g = jnp.asarray(np.asarray(surv_rows, np.int32))
                     pool.append((surv_ids,
                                  jax.tree.map(lambda x: x[g], out)))
+            host_s = rec["host_s"] + (time.perf_counter() - h0)
+            host_accum += host_s
+            wait_accum += wait_s
             if tuner is not None:
-                tuner.record(C, dt, lanes=int(np.sum(live_row)))
+                tuner.record(C, dt, lanes=int(np.sum(live_row)),
+                             host_dt=host_s)
                 if tele and C in tuner.rates:
                     BUS.emit("autotune.probe", rung=C, dur=dt,
                              lanes=int(np.sum(live_row)),
                              rate=tuner.rates[C])
             else:
                 q0 = schedule.quantum
-                schedule.grow_quantum(dt)
+                schedule.grow_quantum(dt, host_s, steps=depth)
                 if tele and schedule.quantum != q0:
                     BUS.emit("quantum.grow", quantum=schedule.quantum,
-                             was=q0, round_dur=dt)
+                             was=q0, round_dur=dt, host_s=host_s)
             if tele:
                 # the per-round heartbeat: lane spawn/freeze/harvest and
                 # the compaction decision, one event per drained round
+                overlap = host_s / max(host_s + wait_s, 1e-9)
                 BUS.emit(
-                    "round.end", round=n_rounds, rung=C, dur=dt,
+                    "round.end", round=rec["round"], rung=C, dur=dt,
                     live=int(np.sum(live_row)), fresh=len(spawned),
                     pad=int(np.sum(~live_row)), epochs=round_epochs,
                     finished=len(fin_ids), survivors=len(surv_ids),
                     pending=len(pending),
                     pool=sum(len(g) for g, _ in pool),
-                    quantum=schedule.quantum, endgame=bool(endgame),
-                    probe=rung is not None,
+                    quantum=schedule.quantum,
+                    endgame=bool(rec["endgame"]),
+                    probe=rec["rung"] is not None,
                     compacted=bool(surv_rows)
                     and len(surv_rows) != C,
+                    inflight=len(inflight),
+                    host_s=host_s, wait_s=wait_s,
+                    overlap_frac=overlap,
                     spawned_ids=spawned[:128],
                     frozen_ids=fin_ids[:128])
                 BUS.count("dse.rounds")
@@ -743,10 +840,27 @@ class BatchRunner:
                 BUS.observe("dse.round_s", dt)
                 BUS.gauge("dse.lanes_live", len(surv_ids))
                 BUS.gauge("dse.lanes_pending", len(pending))
+                BUS.gauge("dse.round.overlap_frac", overlap)
             n_rounds += 1
 
+        while pool or pending or inflight:
+            # fill the pipeline: dispatch up to ``depth`` rounds before
+            # blocking on the oldest round's liveness — round k+1's
+            # assembly/dispatch overlaps round k's device compute.
+            # Probe rounds stay unpipelined (they need clean per-round
+            # timings) and the endgame is terminal by construction.
+            while (pool or pending) and len(inflight) < depth:
+                inflight.append(dispatch())
+                if inflight[-1]["endgame"] or tuner is not None:
+                    break
+            resolve(inflight.popleft())
+
+        occ = host_accum / max(host_accum + wait_accum, 1e-9)
         self.last_rounds = {"rounds": n_rounds, "chunk": schedule.top,
                             "quantum": schedule.quantum, "shard": d,
+                            "pipeline": depth,
+                            "host_s": host_accum, "wait_s": wait_accum,
+                            "overlap_frac": occ,
                             "trace_count": self.trace_count}
         # remember which rungs this (sim, B, topology) actually compiled
         # so the next process can pre-warm them from the persistent cache
@@ -754,7 +868,8 @@ class BatchRunner:
         if BUS.active:
             BUS.emit("rounds.end", B=B, rounds=n_rounds,
                      chunk=schedule.top, quantum=schedule.quantum,
-                     shard=d, trace_count=self.trace_count)
+                     shard=d, pipeline=depth, overlap_frac=occ,
+                     trace_count=self.trace_count)
         # final assembly in point order: concat the finished segments
         # once, then one gather per leaf restores lane order
         all_ids = np.asarray([i for ids, _ in done for i in ids], np.int32)
@@ -872,12 +987,33 @@ def _static_kwarg_names(build_fn) -> list[str] | None:
                           inspect.Parameter.KEYWORD_ONLY)]
 
 
+def _extract_arity(fn) -> int:
+    """2 for the classic ``extract(sim, lane_state)`` signature, 3 when
+    the extractor also wants the point's global index (``extract(sim,
+    lane_state, index)`` — what :class:`~repro.dse.mux.LaneMux` uses to
+    route rows back to their owning job)."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return 2
+    n = 0
+    for p in sig.parameters.values():
+        if p.kind in (inspect.Parameter.POSITIONAL_ONLY,
+                      inspect.Parameter.POSITIONAL_OR_KEYWORD):
+            n += 1
+        elif p.kind is inspect.Parameter.VAR_POSITIONAL:
+            return 3
+    return 3 if n >= 3 else 2
+
+
 def run_sweep(build_fn: Callable, spec: SweepSpec, until,
               extract: Callable | None = None, chunk: int | None = None,
-              max_epochs: int = 2_000_000, shard: "bool | int" = False,
+              max_epochs: "int | Sequence[int]" = 2_000_000,
+              shard: "bool | int" = False,
               schedule: ChunkSchedule | None = None,
               resume: Sequence[ResumeHandle | None] | None = None,
-              return_states: bool = False):
+              return_states: bool = False,
+              pipeline: "bool | int | None" = None):
     """Simulate every design point of ``spec`` and return tidy result rows.
 
     ``build_fn(**static_kwargs) -> (sim, state)`` builds the topology; it
@@ -885,9 +1021,12 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
     group compiles once and vmaps its traced points).  ``extract(sim,
     final_lane_state) -> dict`` pulls per-config results (default: engine
     counters); lanes are handed to it *host-side* — one ``jax.device_get``
-    per chunk — so scalar casts in the extractor never sync.  Rows come
-    back in spec order, each the point's axis assignment merged with its
-    extracted results.
+    per chunk — so scalar casts in the extractor never sync.  An extractor
+    that takes a third positional arg gets the point's global spec index
+    too (``extract(sim, lane_state, index)`` — how
+    :class:`~repro.dse.mux.LaneMux` routes rows of interleaved jobs).
+    Rows come back in spec order, each the point's axis assignment merged
+    with its extracted results.
 
     Execution is **round-based and straggler-free**
     (:meth:`BatchRunner.run_rounds`): every group streams through the
@@ -900,6 +1039,10 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
     ``shard=True`` (or a device count) spans each round over the lane
     mesh with globally-rebalanced compaction — rows stay bit-identical
     to the single-device path (:meth:`BatchRunner.run_rounds`).
+    ``pipeline`` forwards to :meth:`BatchRunner.run_rounds` — rounds
+    pipeline at depth 2 by default (host compaction overlaps device
+    compute); ``pipeline=False`` restores the alternating loop,
+    bit-identically.
 
     **Topology families** (``shape.*`` axes, DSE.md): shape axes sweep
     instance counts / wiring *without* forming compile groups.  The
@@ -939,6 +1082,7 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
     rows: list[dict | None] = [None] * len(spec)
     lane_states = LaneStates() if return_states else None
     until_arr = np.broadcast_to(np.asarray(until, np.float32), (len(spec),))
+    me_arr = np.broadcast_to(np.asarray(max_epochs, np.int64), (len(spec),))
     shape_mode = spec.has_shape_axes()
     tele = BUS.active
     sweep_t0 = time.perf_counter()
@@ -968,6 +1112,7 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
         # neither the whole-spec union nor a single target would do)
         group_spec = SweepSpec(tuple(traced))
         u_group = until_arr[np.asarray(indices)]
+        me_group = me_arr[np.asarray(indices)]
         res = ([resume[i] for i in indices] if resume is not None
                else None)
         warm = res is not None and any(h is not None for h in res)
@@ -1010,8 +1155,9 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
             params_b = stack_params(plist)
             runner = runner_for(sim)
             out = runner.run_rounds(states, params_b, u_group,
-                                    schedule=sched, max_epochs=max_epochs,
-                                    shard=shard, init_epochs=init_ep)
+                                    schedule=sched, max_epochs=me_group,
+                                    shard=shard, init_epochs=init_ep,
+                                    pipeline=pipeline)
         else:
             sim, st = build_fn(**static_kwargs)
             group_spec.validate(sim)
@@ -1020,8 +1166,9 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
             template = ([h.state if h is not None else st for h in res]
                         if warm else st)
             out = runner.run_rounds(template, params_b, u_group,
-                                    schedule=sched, max_epochs=max_epochs,
-                                    shard=shard, init_epochs=init_ep)
+                                    schedule=sched, max_epochs=me_group,
+                                    shard=shard, init_epochs=init_ep,
+                                    pipeline=pipeline)
         # one device_get serves both the result rows and (when asked)
         # the resumable final states — never two transfers per group
         ex = extract or default_extract
@@ -1033,7 +1180,12 @@ def run_sweep(build_fn: Callable, spec: SweepSpec, until,
                      bytes=int(sum(x.nbytes for x in jax.tree.leaves(host)
                                    if hasattr(x, "nbytes"))))
             BUS.observe("dse.transfer.rows_s", dt)
-        group_rows = [ex(sim, lane(host, j)) for j in range(len(indices))]
+        if _extract_arity(ex) >= 3:     # index-aware: mux row routing
+            group_rows = [ex(sim, lane(host, j), indices[j])
+                          for j in range(len(indices))]
+        else:
+            group_rows = [ex(sim, lane(host, j))
+                          for j in range(len(indices))]
         if lane_states is not None:
             lane_states.add_group(host, indices)
         for j, i in enumerate(indices):

@@ -13,14 +13,23 @@ pending-config queue.  This module owns the policy side of that loop:
   streams through a handful of cached programs with zero recompiles
   after warmup.
 * :class:`ChunkSchedule` — ladder + epoch quantum + autotune switches.
-  The quantum is *adaptive upward*: when a round's wall time falls under
-  ``min_round_s`` the quantum doubles (bounded), so round overhead
-  (liveness pull + host-side compaction) stays amortized on any
-  workload without retuning.  Quantum and ladder choices never change
+  The quantum is *adaptive upward*: when a round's total cost — device
+  wall time **plus the host-side harvest/compact/assembly time the
+  runner reports** — falls under ``min_round_s``, or when host work
+  dominates the device step outright, the quantum doubles (bounded), so
+  round overhead stays amortized on any workload without retuning.
+  Counting host time matters under pipelining (ENGINE_PERF.md "Round
+  pipelining"): a short quantum used to look free because only the
+  device step was credited, even when per-round host bookkeeping was
+  the actual bottleneck.  Quantum and ladder choices never change
   results — lanes are independent under vmap and freeze bit-exactly at
   their own horizons — they only move wall-clock.
 * :class:`ChunkAutotuner` — a one-shot probe of 2–3 ladder rungs on the
   first quanta, picking the rung with the best measured lane throughput.
+  The probe score divides lanes by device time *plus* that round's
+  host-side harvest/compact time, so the winner maximizes pipeline
+  occupancy — end-to-end round throughput — not just device throughput
+  (a wide rung whose harvest gathers dominate the round no longer wins).
   On small hosts the config-axis vmap saturates well below large B
   (DSE.md "Performance"), so the right chunk is often much smaller than
   the sweep; probing is real work (probe lanes advance normally), so it
@@ -97,10 +106,31 @@ class ChunkSchedule:
         ladder = tuple(r for r in self.ladder if r <= top) or (top,)
         return dataclasses.replace(self, ladder=ladder, autotune=False)
 
-    def grow_quantum(self, round_dt: float) -> None:
-        """Adaptive quantum policy: double while rounds are cheap."""
-        if round_dt < self.min_round_s and self.quantum < MAX_QUANTUM:
+    def grow_quantum(self, round_dt: float, host_dt: float = 0.0,
+                     steps: int = 1) -> None:
+        """Adaptive quantum policy: grow while rounds are cheap *in
+        total* — device step plus the host-side harvest/compact/assembly
+        time (``host_dt``) the runner measured for the round — or while
+        host work dominates the device step (then a bigger quantum
+        amortizes the fixed per-round bookkeeping and raises pipeline
+        occupancy).  ``steps`` bounds the doublings per observation and
+        is the caller's pipeline depth: with depth d, d rounds are
+        dispatched at a stale quantum before the next measurement
+        arrives, so a double-per-observation ramp would pay every
+        intermediate quantum d times over — d doublings per observation
+        keeps the ramp's *round count* equal to the sequential loop's.
+        Growth past the first doubling is predictive (the device step
+        scales ~linearly with the quantum while the host side barely
+        does, so the measured round is extrapolated before each extra
+        doubling); at ``steps=1`` the policy is exactly the sequential
+        one-doubling-per-cheap-round rule."""
+        for _ in range(max(1, int(steps))):
+            if self.quantum >= MAX_QUANTUM or not (
+                    (round_dt + host_dt) < self.min_round_s
+                    or host_dt > round_dt):
+                return
             self.quantum *= 2
+            round_dt *= 2.0
 
 
 def auto_schedule(b: int, quantum: int | None = None,
@@ -126,10 +156,14 @@ class ChunkAutotuner:
 
     For each candidate rung the runner executes two rounds at that size:
     the first is the compile/warmup round (untimed), the second is timed.
-    ``lanes / dt`` at a fixed quantum is directly proportional to
-    configs/sec for uniform lanes, and every probed round is *real*
-    sweep progress — survivors flow back into the normal round loop — so
-    the probe's only cost is running briefly at a sub-optimal width.
+    ``lanes / (dt + host_dt)`` at a fixed quantum is directly
+    proportional to end-to-end configs/sec for uniform lanes — the
+    denominator is the round's *total* cost, device step plus the
+    host-side harvest/compact work the rung caused, so the winner is the
+    rung with the best pipeline occupancy rather than the widest device
+    dispatch.  Every probed round is *real* sweep progress — survivors
+    flow back into the normal round loop — so the probe's only cost is
+    running briefly at a sub-optimal width.
     """
 
     def __init__(self, schedule: ChunkSchedule, fillable: int):
@@ -152,13 +186,17 @@ class ChunkAutotuner:
                 return r
         return None
 
-    def record(self, rung: int, dt: float, lanes: int | None = None) -> None:
+    def record(self, rung: int, dt: float, lanes: int | None = None,
+               host_dt: float = 0.0) -> None:
         """Record a probe round.  ``lanes`` is the number of *live* lanes
         the round ran (zero-horizon padding executes no epochs and must
-        not be credited as throughput)."""
+        not be credited as throughput); ``host_dt`` is the host-side
+        harvest/compact/assembly time the round cost — part of the score,
+        so a rung that is fast on device but expensive to compact does
+        not win."""
         if rung in self._warmed:
             self.rates[rung] = (rung if lanes is None else lanes) \
-                / max(dt, 1e-9)
+                / max(dt + host_dt, 1e-9)
         else:
             self._warmed.add(rung)   # first (compile) round is untimed
 

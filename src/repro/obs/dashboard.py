@@ -59,8 +59,15 @@ class CampaignStats:
         self._tell_hist = collections.deque(maxlen=_RATE_WINDOW)
         self.promotions = []           # last few rung.promote payloads
         self.cache = {"hits": 0, "misses": 0, "writes": 0,
-                      "bytes_read": 0, "bytes_written": 0, "dir": None}
+                      "bytes_read": 0, "bytes_written": 0,
+                      "evictions": 0, "bytes_evicted": 0, "dir": None}
         self.shards = {"devices": 1, "rebalances": 0, "lanes_moved": 0}
+        self.pipeline = {"depth": 1, "overlap_frac": None,
+                         "host_s_total": 0.0, "wait_s_total": 0.0}
+        self.mux = {"runs": 0, "jobs": 0}
+        # the round timeline: one compact entry per drained round, the
+        # raw material for a per-round occupancy strip chart
+        self._timeline = collections.deque(maxlen=120)
 
     # ------------------------------------------------------------------
     def on_event(self, ev: dict) -> None:
@@ -78,6 +85,15 @@ class CampaignStats:
                           "pool": int(ev.get("pool", 0))}
             self.epochs_total += int(ev.get("epochs", 0))
             self._round_hist.append((ev["ts"], int(ev.get("epochs", 0))))
+            self.pipeline["host_s_total"] += float(ev.get("host_s", 0.0))
+            self.pipeline["wait_s_total"] += float(ev.get("wait_s", 0.0))
+            if ev.get("overlap_frac") is not None:
+                self.pipeline["overlap_frac"] = float(ev["overlap_frac"])
+            self._timeline.append(
+                {k: ev.get(k) for k in ("round", "rung", "dur", "host_s",
+                                        "wait_s", "overlap_frac", "inflight",
+                                        "finished", "survivors", "epochs",
+                                        "probe", "endgame")})
         elif kind == "sweep.end":
             self.sweeps += 1
             self.lanes = {"live": 0, "pending": 0, "pool": 0}
@@ -117,14 +133,21 @@ class CampaignStats:
         elif kind == "cache.write":
             self.cache["writes"] += 1
             self.cache["bytes_written"] += int(ev.get("bytes", 0))
+        elif kind == "cache.evict":
+            self.cache["evictions"] += 1
+            self.cache["bytes_evicted"] += int(ev.get("bytes", 0))
         elif kind == "cache.enable":
             self.cache["dir"] = ev.get("dir")
+        elif kind == "mux.start":
+            self.mux["runs"] += 1
+            self.mux["jobs"] += len(ev.get("jobs") or ())
         elif kind == "shard.rebalance":
             self.shards["devices"] = int(ev.get("shards", 1))
             self.shards["rebalances"] += 1
             self.shards["lanes_moved"] += int(ev.get("moved", 0))
         elif kind == "rounds.start":
             self.shards["devices"] = int(ev.get("shard", 1))
+            self.pipeline["depth"] = int(ev.get("pipeline", 1))
 
     @staticmethod
     def _rate(hist) -> float:
@@ -171,6 +194,16 @@ class CampaignStats:
                               if self.cache["hits"] + self.cache["misses"]
                               else None)),
                 "shards": dict(self.shards),
+                "pipeline": dict(
+                    self.pipeline,
+                    run_overlap_frac=(
+                        self.pipeline["host_s_total"]
+                        / (self.pipeline["host_s_total"]
+                           + self.pipeline["wait_s_total"])
+                        if self.pipeline["host_s_total"]
+                        + self.pipeline["wait_s_total"] > 0 else None)),
+                "mux": dict(self.mux),
+                "round_timeline": list(self._timeline),
                 "search": dict(self.search),
                 "promotions": list(self.promotions),
             }
@@ -180,12 +213,25 @@ _INDEX_HTML = """<!DOCTYPE html>
 <html><head><meta charset="utf-8"><title>campaign</title>
 <style>body{font-family:monospace;margin:16px;background:#fafafa}
 pre{background:#fff;border:1px solid #ddd;padding:12px}</style></head>
-<body><h3>DSE campaign</h3><pre id="s">loading...</pre>
+<body><h3>DSE campaign</h3>
+<h4>round timeline (recent; # = overlap)</h4><pre id="t">-</pre>
+<pre id="s">loading...</pre>
 <script>
+function bar(f){const n=Math.round((f||0)*20);
+  return '#'.repeat(n)+'.'.repeat(20-n);}
+function timeline(rows){
+  return rows.slice(-24).map(r=>
+    `r${String(r.round).padStart(4)} rung=${String(r.rung).padStart(4)} `+
+    `${(r.dur||0).toFixed(3)}s host=${(r.host_s||0).toFixed(3)}s `+
+    `wait=${(r.wait_s||0).toFixed(3)}s [${bar(r.overlap_frac)}] `+
+    `infl=${r.inflight}${r.endgame?' end':''}${r.probe?' probe':''}`
+  ).join('\\n')||'-';}
 async function tick(){
-  try{const r=await fetch('/campaign');
+  try{const r=await fetch('/campaign');const j=await r.json();
+      document.getElementById('t').textContent=
+        timeline(j.round_timeline||[]);
       document.getElementById('s').textContent=
-        JSON.stringify(await r.json(),null,2);}catch(e){}
+        JSON.stringify(j,null,2);}catch(e){}
   setTimeout(tick,1000);}
 tick();
 </script></body></html>

@@ -193,3 +193,79 @@ def test_second_process_performs_zero_compiles(tmp_path):
     assert second["hits"] > 0
     assert first["artifacts"]["writes"] > 0
     assert second["artifacts"]["hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# size-capped LRU GC
+# ---------------------------------------------------------------------------
+def _fake_blob(d, name, nbytes, age_s):
+    import time
+    p = os.path.join(d, name)
+    with open(p, "wb") as fh:
+        fh.write(b"x" * nbytes)
+    t = time.time() - age_s
+    os.utime(p, (t, t))
+    return p
+
+
+def test_gc_evicts_lru_down_to_cap_and_spares_store(cache_dir):
+    os.makedirs(cache_dir, exist_ok=True)
+    for i in range(5):                    # oldest first: ages 50..10
+        _fake_blob(cache_dir, f"exec_{i:04x}.bin", 1000, age_s=50 - 10 * i)
+    store_p = os.path.join(cache_dir, dse_cache.STORE_NAME)
+    with open(store_p, "w") as fh:        # big store: still never evicted
+        fh.write("{}" + " " * 4000)
+    before = dse_cache.stats()["evictions"]
+    with capture() as sink:
+        n = dse_cache.gc(limit=3000)
+    assert n == 2                          # two oldest blobs freed 2000B
+    left = sorted(os.listdir(cache_dir))
+    assert dse_cache.STORE_NAME in left
+    assert "exec_0000.bin" not in left and "exec_0001.bin" not in left
+    assert "exec_0004.bin" in left
+    assert dse_cache.stats()["evictions"] == before + 2
+    ev = [e for e in sink.events if e["kind"] == "cache.evict"]
+    assert len(ev) == 2 and all(e["bytes"] == 1000 for e in ev)
+
+
+def test_gc_noop_under_cap_or_unconfigured(cache_dir):
+    os.makedirs(cache_dir, exist_ok=True)
+    _fake_blob(cache_dir, "exec_aaaa.bin", 100, age_s=10)
+    assert dse_cache.gc(limit=10_000) == 0          # under cap
+    assert dse_cache.gc() == 0                      # no cap configured
+    dse_cache.configure(None)
+    assert dse_cache.gc(limit=1) == 0               # no cache dir
+
+
+def test_configure_max_bytes_and_env_fallback(tmp_path, monkeypatch):
+    d = str(tmp_path / "c")
+    dse_cache.configure(d, max_bytes=123)
+    try:
+        assert dse_cache.max_cache_bytes() == 123
+        dse_cache.configure(d)                      # reset -> env fallback
+        monkeypatch.setenv(dse_cache.ENV_MAX_BYTES, "456")
+        assert dse_cache.max_cache_bytes() == 456
+        monkeypatch.setenv(dse_cache.ENV_MAX_BYTES, "junk")
+        assert dse_cache.max_cache_bytes() is None
+        monkeypatch.delenv(dse_cache.ENV_MAX_BYTES)
+        assert dse_cache.max_cache_bytes() is None
+    finally:
+        dse_cache.configure(None)
+
+
+def test_put_executable_triggers_gc(cache_dir, monkeypatch):
+    """Writes keep the dir under the cap automatically: after an
+    oversized put, older blobs are gone."""
+    os.makedirs(cache_dir, exist_ok=True)
+    _fake_blob(cache_dir, "exec_old0.bin", 2000, age_s=100)
+    _fake_blob(cache_dir, "exec_old1.bin", 2000, age_s=50)
+    dse_cache.configure(cache_dir, max_bytes=4500)
+    sim, st = build(n_cores=2, n_reqs=6, donate=False)
+    # a real AOT executable write (size ~O(10KB)) blows the cap; both
+    # old blobs must age out while the fresh write survives
+    import jax, jax.numpy as jnp
+    compiled = jax.jit(lambda x: x + 1).lower(jnp.zeros(4)).compile()
+    dse_cache.put_executable(sim, 4, 1, compiled)
+    left = sorted(os.listdir(cache_dir))
+    assert "exec_old0.bin" not in left and "exec_old1.bin" not in left
+    assert any(f.startswith("exec_") and f.endswith(".bin") for f in left)

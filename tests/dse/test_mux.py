@@ -1,0 +1,127 @@
+"""Cross-job lane multiplexing (DSE.md "Multiplexing jobs into shared
+batches").
+
+The contract: a multiplexed job's rows are exactly its solo-run rows —
+sharing rounds, rungs and executables with other jobs changes nothing
+about any job's results — and refill is fair (round-robin point
+interleave, so no job waits behind the whole of another).
+"""
+import numpy as np
+import pytest
+
+from repro.dse import LaneMux, SweepSpec, run_sweep, runner_for
+from repro.dse.mux import MUX_AXIS, MuxJob
+from repro.obs.bus import capture
+from repro.sims.memsys import build
+
+
+def _build_a():
+    return build(n_cores=3, pattern="mixed", n_reqs=6, donate=True)
+
+
+def _build_b():
+    return build(n_cores=2, pattern="stream", n_reqs=6, donate=True)
+
+
+SPEC_A = SweepSpec.explicit(
+    [{"conn_latency[-1]": float(v)} for v in (10, 25, 40)])
+SPEC_B = SweepSpec.explicit(
+    [{"conn_latency[-1]": float(v)} for v in (12, 30)])
+
+
+# ---------------------------------------------------------------------------
+def test_two_jobs_shared_build_rows_identical_to_solo():
+    """Two interleaved jobs over the same topology produce exactly the
+    rows each would produce alone — including per-job mixed horizons."""
+    u_a = [300.0, 1200.0, 600.0]
+    u_b = [900.0, 150.0]
+    solo_a = run_sweep(_build_a, SPEC_A, u_a, chunk=2)
+    solo_b = run_sweep(_build_a, SPEC_B, u_b, chunk=2)
+
+    mux = LaneMux()
+    mux.submit("a", _build_a, SPEC_A, u_a)
+    mux.submit("b", _build_a, SPEC_B, u_b)
+    got = mux.run(chunk=2)
+    assert set(got) == {"a", "b"}
+    assert got["a"] == solo_a
+    assert got["b"] == solo_b
+
+
+def test_two_jobs_different_builds_routed_and_identical():
+    """Jobs over *different* topologies multiplex too (the reserved
+    routing axis keeps their compile groups apart) and the axis never
+    leaks into result rows."""
+    solo_a = run_sweep(_build_a, SPEC_A, 500.0)
+    solo_b = run_sweep(_build_b, SPEC_B, [250.0, 800.0])
+
+    mux = LaneMux()
+    mux.submit("a", _build_a, SPEC_A, 500.0)
+    mux.submit("b", _build_b, SPEC_B, [250.0, 800.0])
+    got = mux.run()
+    assert got["a"] == solo_a
+    assert got["b"] == solo_b
+    for rows in got.values():
+        assert all(MUX_AXIS not in r for r in rows)
+
+
+def test_jobs_share_one_compile_group_and_rounds():
+    """Same build + same static axes -> one sweep group: the jobs'
+    lanes really ride shared batches (one sweep.group event), and the
+    mux telemetry brackets the run."""
+    mux = LaneMux()
+    mux.submit("a", _build_a, SPEC_A, 400.0)
+    mux.submit("b", _build_a, SPEC_B, 700.0)
+    with capture() as sink:
+        mux.run(chunk=2)
+    groups = [e for e in sink.events if e["kind"] == "sweep.group"]
+    assert len(groups) == 1
+    assert groups[0]["n_points"] == len(SPEC_A) + len(SPEC_B)
+    kinds = [e["kind"] for e in sink.events]
+    assert kinds[0] == "mux.start" and kinds[-1] == "mux.end"
+
+
+def test_interleave_is_round_robin_fair():
+    order = LaneMux._interleave([
+        MuxJob("a", _build_a, SPEC_A, 1.0),     # 3 points
+        MuxJob("b", _build_a, SPEC_B, 1.0),     # 2 points
+    ])
+    assert order == [(0, 0), (1, 0), (0, 1), (1, 1), (0, 2)]
+
+
+def test_per_job_extractors_and_custom_rows():
+    def ex_a(sim, lane_state):
+        return {"t": float(lane_state.time)}
+
+    mux = LaneMux()
+    mux.submit("a", _build_a, SPEC_A, 400.0, extract=ex_a)
+    mux.submit("b", _build_a, SPEC_B, 400.0)
+    got = mux.run(chunk=2)
+    assert all(set(r) == {"conn_latency[-1]", "t"} for r in got["a"])
+    assert all("epochs" in r for r in got["b"])     # default extractor
+
+
+def test_reserved_axis_and_duplicate_job_id_rejected():
+    bad = SweepSpec.explicit([{MUX_AXIS: 0, "conn_latency[-1]": 5.0}],
+                             ragged=True)
+    mux = LaneMux()
+    with pytest.raises(ValueError, match="reserved"):
+        mux.submit("a", _build_a, bad, 100.0)
+    mux.submit("a", _build_a, SPEC_A, 100.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        mux.submit("a", _build_a, SPEC_B, 100.0)
+
+
+def test_mux_adds_no_recompiles_over_solo():
+    """Multiplexing same-build jobs reuses the solo runs' executables:
+    after a solo warmup at the same rungs, a mux run retraces nothing."""
+    from repro.dse import memoize_build
+    mb = memoize_build(_build_a)
+    run_sweep(mb, SPEC_A, 400.0, chunk=2)
+    run_sweep(mb, SPEC_B, 700.0, chunk=2)
+    sim, _ = mb()
+    warm = runner_for(sim).trace_count
+    mux = LaneMux()
+    mux.submit("a", mb, SPEC_A, 400.0)
+    mux.submit("b", mb, SPEC_B, 700.0)
+    mux.run(chunk=2)
+    assert runner_for(sim).trace_count == warm

@@ -1,0 +1,157 @@
+"""Round pipelining (ENGINE_PERF.md "Round pipelining").
+
+The contract: pipelining is an *execution strategy*, never a semantic —
+``pipeline=2`` (the default) must produce bit-identical results to the
+strictly-alternating loop (``pipeline=False``) and to a monolithic
+full-batch run, on every memsys pattern, on masked family lanes and on
+the 2-device sharded path; and it must not cost any recompiles (the
+in-flight rounds reuse the same per-rung executables).
+"""
+import numpy as np
+import pytest
+
+from repro.dse import (BatchRunner, ChunkSchedule, build_param_batch,
+                       make_ladder, run_sweep, stack_params,
+                       stack_state_list, stack_states)
+from repro.obs.bus import capture
+from repro.sims.memsys import build, build_family
+
+from test_sharded import _run_two_device
+
+PATTERNS = ["compute", "stream", "pointer", "idle_half", "mixed"]
+
+
+def _assert_tree_equal(a, b):
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _sched(b, top=2, quantum=24):
+    return ChunkSchedule(make_ladder(b, top=top), quantum=quantum)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_pipelined_bit_identical_all_patterns(pattern):
+    """pipeline=2 == pipeline=False == full batch, on every pattern,
+    at mixed per-lane horizons through real compaction."""
+    sim, st = build(n_cores=3, pattern=pattern, n_reqs=6, donate=True)
+    runner = BatchRunner(sim)
+    pts = [{"conn_latency[-1]": float(v)} for v in (10, 25, 40, 15, 30, 20)]
+    pb = build_param_batch(sim, pts)
+    u = np.asarray([150.0, 1200.0, 600.0, 300.0, 900.0, 75.0], np.float32)
+    full = runner.run_batch(stack_states(st, 6), pb, u)
+    seq = runner.run_rounds(st, pb, u, schedule=_sched(6), pipeline=False)
+    assert runner.last_rounds["pipeline"] == 1
+    piped = runner.run_rounds(st, pb, u, schedule=_sched(6))
+    assert runner.last_rounds["pipeline"] == 2
+    _assert_tree_equal(full, seq)
+    _assert_tree_equal(seq, piped)
+
+
+def test_pipelined_family_masked_bit_identical():
+    """Masked family lanes (different sub-shapes) ride pipelined rounds
+    bit-identically."""
+    fam = build_family(n_cores=4, pattern="mixed", n_reqs=8, donate=True)
+    shapes = [{"core": c} for c in (1, 2, 3, 4, 2, 3)]
+    untils = np.asarray([300.0, 900.0, 150.0, 1200.0, 600.0, 75.0],
+                        np.float32)
+    pb = stack_params([fam.params_for(s) for s in shapes])
+    states = [fam.state_for(s) for s in shapes]
+    runner = BatchRunner(fam.sim)
+    seq = runner.run_rounds(states, pb, untils, schedule=_sched(6),
+                            pipeline=False)
+    piped = runner.run_rounds(states, pb, untils, schedule=_sched(6))
+    assert runner.last_rounds["rounds"] > 2
+    _assert_tree_equal(seq, piped)
+
+
+def test_pipeline_actually_overlaps_and_reports_occupancy():
+    """With several rounds in a drain, dispatch runs ahead of resolve:
+    round.end events see a non-empty in-flight queue, and both the
+    per-round and run-level occupancy stats are populated."""
+    sim, st = build(n_cores=3, pattern="mixed", n_reqs=6, donate=True)
+    runner = BatchRunner(sim)
+    pts = [{"conn_latency[-1]": float(v)} for v in (10, 25, 40, 15, 30, 20)]
+    pb = build_param_batch(sim, pts)
+    u = np.asarray([150.0, 1200.0, 600.0, 300.0, 900.0, 75.0], np.float32)
+    with capture() as sink:
+        runner.run_rounds(st, pb, u, schedule=_sched(6, quantum=16))
+    ends = [e for e in sink.events if e["kind"] == "round.end"]
+    assert len(ends) > 2
+    assert any(e["inflight"] > 0 for e in ends)
+    for e in ends:
+        assert 0.0 <= e["overlap_frac"] <= 1.0
+        assert e["host_s"] >= 0.0 and e["wait_s"] >= 0.0
+    starts = [e for e in sink.events if e["kind"] == "rounds.start"]
+    assert starts and starts[0]["pipeline"] == 2
+    lr = runner.last_rounds
+    assert lr["pipeline"] == 2
+    assert 0.0 <= lr["overlap_frac"] <= 1.0
+
+
+def test_pipelined_rounds_no_recompiles_after_warmup():
+    """After the ladder warms up, pipelined re-runs retrace nothing —
+    in-flight depth never creates new executables."""
+    sim, st = build(n_cores=3, pattern="mixed", n_reqs=6, donate=True)
+    runner = BatchRunner(sim)
+    pts = [{"conn_latency[-1]": float(v)} for v in (10, 25, 40, 15, 30, 20)]
+    pb = build_param_batch(sim, pts)
+    u = np.asarray([150.0, 1200.0, 600.0, 300.0, 900.0, 75.0], np.float32)
+    runner.run_rounds(st, pb, u, schedule=_sched(6))       # warmup
+    warm = runner.trace_count
+    for depth in (2, 3, False):
+        runner.run_rounds(st, pb, u, schedule=_sched(6), pipeline=depth)
+    # sequential and pipelined share the same per-rung executables
+    assert runner.trace_count == warm
+
+
+def test_run_sweep_pipeline_flag_bit_identical():
+    """run_sweep(pipeline=...) forwards to the round loop; rows match
+    exactly either way."""
+    def b():
+        return build(n_cores=3, pattern="mixed", n_reqs=6, donate=True)
+
+    from repro.dse import SweepSpec
+    spec = SweepSpec.explicit(
+        [{"conn_latency[-1]": float(v)} for v in (10, 25, 40, 15)])
+    u = [150.0, 1200.0, 600.0, 300.0]
+    seq = run_sweep(b, spec, u, chunk=2, pipeline=False)
+    piped = run_sweep(b, spec, u, chunk=2)
+    assert seq == piped
+
+
+def test_pipelined_sharded_two_device_bit_identical():
+    """The 2-device shard_map path composes with pipelining: rows stay
+    bit-identical to the sequential sharded loop and to the 1-device
+    pipelined loop."""
+    _run_two_device("""
+        import jax, numpy as np
+        from repro.dse import (BatchRunner, ChunkSchedule,
+                               build_param_batch, make_ladder,
+                               stack_states)
+        from repro.sims.memsys import build
+
+        assert jax.local_device_count() == 2
+        sim, st = build(n_cores=3, pattern="mixed", n_reqs=6, donate=True)
+        runner = BatchRunner(sim)
+        pts = [{"conn_latency[-1]": float(v)}
+               for v in (10, 25, 40, 15, 30, 20)]
+        pb = build_param_batch(sim, pts)
+        u = np.asarray([150.0, 1200.0, 600.0, 300.0, 900.0, 75.0],
+                       np.float32)
+        sched = lambda: ChunkSchedule(make_ladder(6, top=4), quantum=24)
+        seq1 = runner.run_rounds(st, pb, u, schedule=sched(),
+                                 pipeline=False)
+        seq2 = runner.run_rounds(st, pb, u, schedule=sched(),
+                                 shard=2, pipeline=False)
+        piped = runner.run_rounds(st, pb, u, schedule=sched(), shard=2)
+        for a, b in ((seq1, seq2), (seq2, piped)):
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_array_equal(np.asarray(x),
+                                              np.asarray(y))
+        print("OK")
+    """)
